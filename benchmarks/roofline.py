@@ -1,0 +1,51 @@
+"""Roofline table assembly: reads the dry-run artifacts (single-pod, per the
+assignment) and prints the three-term roofline per (arch × shape) cell."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List
+
+HEADERS = ["arch", "shape", "bottleneck", "compute_s", "memory_s",
+           "collective_s", "mfu_bound", "useful_ratio"]
+
+
+def load_cells(root: str = "experiments/dryrun/pod16x16") -> List[Dict]:
+    cells = []
+    for f in sorted(Path(root).glob("*.json")):
+        r = json.loads(f.read_text())
+        if r.get("status") == "ok" and "roofline" in r:
+            cells.append(r)
+    return cells
+
+
+def table(root: str = "experiments/dryrun/pod16x16") -> str:
+    rows = [" | ".join(HEADERS)]
+    for r in load_cells(root):
+        t = r["roofline"]
+        rows.append(" | ".join([
+            r["arch"], r["shape"], t["bottleneck"],
+            f"{t['compute_s']:.3e}", f"{t['memory_s']:.3e}",
+            f"{t['collective_s']:.3e}", f"{t['mfu_bound']:.3f}",
+            f"{t['useful_ratio']:.3f}"]))
+    return "\n".join(rows)
+
+
+def interesting_cells(root: str = "experiments/dryrun/pod16x16") -> Dict:
+    """The three hillclimb picks: worst mfu_bound, most collective-bound,
+    most representative of the paper's technique (a decode cell: the banked
+    KV pool is the serving feature)."""
+    cells = load_cells(root)
+    worst = min(cells, key=lambda r: r["roofline"]["mfu_bound"])
+    coll = max(cells, key=lambda r: (r["roofline"]["collective_s"] /
+                                     max(r["roofline"]["step_s_bound"], 1e-30)))
+    decode = [r for r in cells if r["shape"] == "decode_32k"]
+    rep = min(decode, key=lambda r: r["roofline"]["mfu_bound"]) if decode else worst
+    return {"worst_mfu": (worst["arch"], worst["shape"]),
+            "most_collective": (coll["arch"], coll["shape"]),
+            "paper_representative": (rep["arch"], rep["shape"])}
+
+
+if __name__ == "__main__":
+    print(table())
+    print(interesting_cells())

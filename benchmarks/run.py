@@ -1,0 +1,68 @@
+"""Benchmark harness: one function per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--full]
+
+Prints ``name,seconds,derived`` CSV lines and writes
+experiments/bench_results.json for EXPERIMENTS.md."""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale transaction counts (slow on 1 CPU)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import paper_figures as F
+
+    scale = dict(num_txns=1000) if args.full else {}
+    jobs = [
+        ("fig4_throughput", lambda: F.fig4_throughput(**scale)),
+        ("fig5_bulk", lambda: F.fig5_bulk(
+            payloads_kb=(4, 16, 64, 256, 1024, 2048) if args.full
+            else (4, 16, 64, 256, 1024))),
+        ("table1_outstanding", lambda: F.table1_outstanding()),
+        ("fig67_traces", lambda: F.fig67_traces(
+            max_txns=3000 if args.full else 1200)),
+        ("comparators", lambda: F.comparators()),
+        ("qos_isolation", lambda: F.qos_isolation()),
+        ("pool_balance", lambda: F.pool_balance()),
+        ("moe_whitening", lambda: F.moe_whitening()),
+    ]
+    if args.only:
+        jobs = [j for j in jobs if j[0] == args.only]
+
+    results = {}
+    print("name,seconds,derived")
+    for name, fn in jobs:
+        t0 = time.time()
+        out = fn()
+        dt = time.time() - t0
+        results[name] = {"seconds": round(dt, 2), "results": out}
+        key = next(iter(out))
+        print(f"{name},{dt:.2f},{json.dumps(out[key])[:110]}")
+
+    # roofline table (from the dry-run artifacts, if present)
+    try:
+        from benchmarks.roofline import interesting_cells, table
+        tbl = table()
+        results["roofline"] = {"table": tbl,
+                               "picks": interesting_cells()}
+        print(f"roofline,0.0,{len(tbl.splitlines()) - 1} cells")
+    except Exception as e:  # dry-run artifacts absent
+        print(f"roofline,0.0,skipped ({e})")
+
+    out_path = Path("experiments/bench_results.json")
+    out_path.parent.mkdir(exist_ok=True)
+    out_path.write_text(json.dumps(results, indent=1, default=str))
+    print(f"# wrote {out_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Sub-quadratic long-context decode: a Mamba2 (SSD) smoke model decodes with
+an O(1) state while an equivally-sized attention model's cache grows linearly.
+
+  PYTHONPATH=src python examples/long_context_decode.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, smoke
+from repro.models import model as M
+
+
+def main():
+    cfg = smoke(get_config("mamba2-1.3b"))
+    params = M.init_params(cfg, 0)
+    B = 2
+    cache = M.init_cache(cfg, B, 8)
+    _, cache = M.prefill(cfg, params,
+                         {"tokens": jnp.zeros((B, 8), jnp.int32)}, cache)
+    state_bytes = sum(x.size * x.dtype.itemsize
+                      for x in jax.tree_util.tree_leaves(cache))
+    step = jax.jit(lambda p, c, t, i: M.decode_step(cfg, p, c, t, i),
+                   donate_argnums=(1,))
+    tok = jnp.zeros((B, 1), jnp.int32)
+    t0 = time.time()
+    for i in range(8, 72):
+        lg, cache = step(params, cache, tok, jnp.int32(i))
+        tok = jnp.argmax(lg[:, -1:], -1).astype(jnp.int32)[:, 0:1] \
+            if lg.ndim == 3 else tok
+    dt = time.time() - t0
+    print(f"decoded 64 tokens in {dt:.2f}s with a constant "
+          f"{state_bytes/1024:.1f} KiB recurrent state "
+          f"(an attention cache would grow linearly with context)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Quickstart: train a reduced config end-to-end on the local device.
+
+  PYTHONPATH=src python examples/quickstart.py [--arch stablelm-1.6b]
+"""
+import argparse
+import time
+
+from repro.configs import get_config, smoke
+from repro.configs.base import RunConfig
+from repro.train.loop import train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-1.6b")
+    ap.add_argument("--steps", type=int, default=40)
+    args = ap.parse_args()
+    cfg = smoke(get_config(args.arch))
+    t0 = time.time()
+    res = train_loop(cfg, RunConfig(arch=args.arch), steps=args.steps)
+    import numpy as np
+    head = float(np.mean(res.losses[:5]))
+    tail = float(np.mean(res.losses[-5:]))
+    print(f"{args.arch}: loss {head:.3f} -> {tail:.3f} "
+          f"in {res.steps_run} steps ({time.time()-t0:.1f}s)")
+    assert tail < head, "training did not reduce the loss"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Batched serving with the BankedKVPool: continuous batching, QoS-isolated
+KV blocks, deterministic round-robin admission.
+
+  PYTHONPATH=src python examples/serve_batch.py [--arch mamba2-1.3b]
+"""
+import argparse
+import time
+
+import numpy as np
+
+from repro.configs import get_config, smoke
+from repro.models import model as M
+from repro.serving.engine import ServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-1.6b")
+    ap.add_argument("--requests", type=int, default=8)
+    args = ap.parse_args()
+    cfg = smoke(get_config(args.arch))
+    params = M.init_params(cfg, 0)
+    eng = ServingEngine(cfg, params, max_batch=4, max_len=64, block_size=8)
+    rng = np.random.default_rng(0)
+    reqs = [eng.submit(rng.integers(0, cfg.vocab_size,
+                                    int(rng.integers(4, 16))),
+                       max_new_tokens=8) for _ in range(args.requests)]
+    t0 = time.time()
+    eng.run(max_steps=500)
+    done = sum(r.done for r in reqs)
+    toks = sum(len(r.out_tokens) for r in reqs)
+    print(f"{args.arch}: {done}/{len(reqs)} requests done, {toks} tokens in "
+          f"{time.time()-t0:.1f}s; pool imbalance "
+          f"{eng.pool.imbalance():.2f}, isolation "
+          f"{'OK' if eng.pool.check_isolation() else 'VIOLATED'}")
+    assert done == len(reqs)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,249 @@
+"""Analytic FLOPs / bytes model per (arch × shape) cell.
+
+Why analytic: XLA's HLO cost analysis visits each computation ONCE — `while`
+(lax.scan) bodies are not multiplied by trip count (verified experimentally:
+a 2-layer and a 24-layer stablelm report identical FLOPs).  We therefore count
+matmul FLOPs from the model definition we control, and VALIDATE the counts
+against XLA on small fully-unrolled configs (tests/test_costs.py) where XLA's
+numbers are trustworthy.
+
+Counting rules:
+  * matmul [.., m, k] × [k, n] = 2·m·k·n FLOPs; elementwise ignored (<1 %)
+  * attention scores+AV count the *executed* rectangle: the baseline chunked
+    attention visits all (q, kv) blocks with masking ⇒ full S·T; with
+    ``triangular=True`` (the §Perf block-skip knob) causal self-attention
+    counts ≈ S·(S+1)/2
+  * MoE counts the capacity buffer actually computed: E · C slots per group
+    (includes padding waste — honest accounting of the dispatch design)
+  * backward = 2× forward on weight-bearing ops; remat adds another forward
+    (full policy) — train multiplier 4 under remat_policy='full', else 3
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.moe import expert_capacity
+
+# TPU v5e hardware constants (assignment-specified)
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+ICI_BW = 50e9                # B/s / link
+
+
+def _attn_flops(cfg: ModelConfig, B, S, T, *, triangular=False) -> float:
+    d, h, g, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, \
+        cfg.resolved_head_dim
+    proj = 2 * B * S * d * (h * hd + 2 * g * hd) + 2 * B * S * h * hd * d
+    st = S * (S + 1) / 2 if (triangular and S == T) else S * T
+    scores = 2 * 2 * B * h * hd * st
+    return proj + scores
+
+
+def _mla_flops(cfg: ModelConfig, B, S, T, *, decode_absorbed=False,
+               triangular=False) -> float:
+    d, h = cfg.d_model, cfg.num_heads
+    r, dn, dr, dv = cfg.kv_lora_rank, cfg.qk_nope_dim, cfg.qk_rope_dim, \
+        cfg.v_head_dim
+    f = 2 * B * S * d * (h * (dn + dr))          # q proj
+    f += 2 * B * S * d * (r + dr)                # compressed kv + k_pe
+    f += 2 * B * S * h * dv * d                  # out proj
+    st = S * (S + 1) / 2 if (triangular and S == T) else S * T
+    if decode_absorbed:
+        f += 2 * B * S * h * dn * r              # q absorption
+        f += 2 * 2 * B * h * st * (r + dr)       # latent scores + AV
+        f += 2 * B * S * h * r * dv              # out absorption
+    else:
+        f += 2 * B * T * r * h * (dn + dv)       # cache up-projection
+        f += 2 * 2 * B * h * st * (dn + dr + dv) / 2 * 2  # scores + AV
+    return f
+
+
+def _ssm_flops(cfg: ModelConfig, B, S, *, decode=False) -> float:
+    d, di = cfg.d_model, cfg.d_inner
+    g, n, h, ph = cfg.ssm_num_groups, cfg.ssm_state_dim, cfg.ssm_num_heads, \
+        cfg.ssm_head_dim
+    f = 2 * B * S * d * (2 * di + 2 * g * n + h)     # z,x,B,C,dt projections
+    f += 2 * B * S * di * d                          # out proj
+    f += 2 * B * S * (di + 2 * g * n) * cfg.ssm_conv_width
+    if decode:
+        f += 2 * B * S * h * ph * n * 2              # state update + readout
+    else:
+        l = min(cfg.ssm_chunk, S)
+        f += 2 * B * S * l * g * n                   # G = C·Bᵀ   (per chunk)
+        f += 2 * B * S * l * h * ph                  # M @ x
+        f += 2 * 2 * B * S * h * ph * n              # chunk states + y_inter
+    return f
+
+
+def _moe_flops(cfg: ModelConfig, B, S) -> float:
+    d = cfg.d_model
+    fe = cfg.moe_d_ff or cfg.d_ff
+    C = expert_capacity(cfg, S)
+    f = 2 * B * S * d * cfg.moe_num_experts           # router
+    f += 3 * 2 * B * cfg.moe_num_experts * C * d * fe  # capacity compute
+    if cfg.moe_num_shared:
+        f += 3 * 2 * B * S * d * (cfg.moe_num_shared * fe)
+    return f
+
+
+def _ffn_flops(cfg: ModelConfig, B, S) -> float:
+    mult = 3 if cfg.mlp_type == "swiglu" else 2
+    return mult * 2 * B * S * cfg.d_model * cfg.d_ff
+
+
+def forward_flops(cfg: ModelConfig, B: int, S: int, *, kind: str,
+                  cache_len: int = 0, triangular: bool = False,
+                  mla_absorbed: bool = False) -> float:
+    """Total forward FLOPs across all chips for one step."""
+    decode = kind == "decode"
+    T = cache_len if decode else S
+    total = 0.0
+    for li in range(cfg.num_layers):
+        if cfg.is_attn_layer(li):
+            if cfg.use_mla:
+                total += _mla_flops(cfg, B, S, T, triangular=triangular,
+                                    decode_absorbed=mla_absorbed and decode)
+            else:
+                total += _attn_flops(cfg, B, S, T, triangular=triangular)
+        else:
+            total += _ssm_flops(cfg, B, S, decode=decode)
+        if cfg.is_moe_layer(li):
+            total += _moe_flops(cfg, B, S)
+        elif cfg.d_ff:
+            total += _ffn_flops(cfg, B, S)
+    if cfg.is_encoder_decoder and kind != "decode":
+        Se = cfg.encoder_seq_len
+        enc = cfg.num_encoder_layers * (_attn_flops(cfg, B, Se, Se)
+                                        + _ffn_flops(cfg, B, Se))
+        total += enc
+    if cfg.is_encoder_decoder:      # cross attention in every decoder layer
+        Te = cfg.encoder_seq_len
+        d, h, hd = cfg.d_model, cfg.num_heads, cfg.resolved_head_dim
+        total += cfg.num_layers * (2 * 2 * B * h * hd * S * Te
+                                   + 2 * B * S * d * h * hd
+                                   + 2 * B * Te * d * 2 * cfg.num_kv_heads * hd)
+    # logits
+    if kind == "train":
+        total += 2 * B * S * cfg.d_model * cfg.padded_vocab
+    else:
+        total += 2 * B * cfg.d_model * cfg.padded_vocab
+    return total
+
+
+def step_flops(cfg: ModelConfig, shape: ShapeConfig, *, cache_len: int = 0,
+               remat: str = "full", triangular: bool = False,
+               mla_absorbed: bool = False) -> float:
+    f = forward_flops(cfg, shape.global_batch, 1 if shape.kind == "decode"
+                      else shape.seq_len, kind=shape.kind,
+                      cache_len=cache_len or shape.seq_len,
+                      triangular=triangular, mla_absorbed=mla_absorbed)
+    if shape.kind == "train":
+        return f * (4.0 if remat == "full" else 3.0)
+    return f
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """The 6·N·D / 6·N_active·D reference (2·N·D for inference forward)."""
+    n_active = active_params(cfg)
+    tokens = shape.global_batch * (1 if shape.kind == "decode"
+                                   else shape.seq_len)
+    mult = 6 if shape.kind == "train" else 2
+    return mult * n_active * tokens
+
+
+def active_params(cfg: ModelConfig) -> int:
+    """Params touched per token (MoE experts scaled by top_k/E)."""
+    n = cfg.num_params()
+    if cfg.moe_num_experts:
+        fe = cfg.moe_d_ff or cfg.d_ff
+        moe_layers = sum(cfg.is_moe_layer(i) for i in range(cfg.num_layers))
+        routed = moe_layers * cfg.moe_num_experts * 3 * cfg.d_model * fe
+        active = moe_layers * cfg.moe_top_k * 3 * cfg.d_model * fe
+        n = n - routed + active
+    return n
+
+
+def hbm_bytes_per_device(cfg: ModelConfig, shape: ShapeConfig, *,
+                         chips: int, tp: int = 16, cache_len: int = 0,
+                         remat: str = "full") -> float:
+    """Per-device HBM traffic per step (dominant terms only; formula in
+    EXPERIMENTS.md §Roofline)."""
+    P = cfg.num_params()
+    tokens_local = shape.global_batch * (1 if shape.kind == "decode"
+                                         else shape.seq_len) / max(
+        chips // tp, 1)
+    d = cfg.d_model
+    if shape.kind == "train":
+        # f32 params r + grads w + adam rw (16B) + bf16 gathered copies rw
+        opt_bytes = 4 + 4 + (16 if "jamba" not in cfg.name else 2) + 4
+        param_io = P / chips * opt_bytes
+        act_io = tokens_local * d * 2 * 2 * (2 + 1) * cfg.num_layers / tp * 4
+        return param_io + act_io
+    if shape.kind == "prefill":
+        param_io = P * 2 / tp          # bf16 weights read once per step
+        act_io = tokens_local * d * 2 * 6 * cfg.num_layers / tp
+        return param_io + act_io
+    # decode: weights + whole local KV cache read per token
+    param_io = P * 2 / (chips if shape.global_batch == 1 else tp)
+    cache = cache_bytes_per_device(cfg, shape, chips=chips, tp=tp,
+                                   cache_len=cache_len)
+    return param_io + cache
+
+
+def cache_bytes_per_device(cfg: ModelConfig, shape: ShapeConfig, *,
+                           chips: int, tp: int = 16,
+                           cache_len: int = 0) -> float:
+    T = cache_len or shape.seq_len
+    B = shape.global_batch
+    dp = max(chips // tp, 1)
+    per_tok = 0
+    for li in range(cfg.num_layers):
+        if cfg.is_attn_layer(li):
+            if cfg.use_mla:
+                per_tok += (cfg.kv_lora_rank + cfg.qk_rope_dim) * 2
+            else:
+                per_tok += 2 * cfg.num_kv_heads * cfg.resolved_head_dim * 2
+    ssm_state = 0
+    for li in range(cfg.num_layers):
+        if not cfg.is_attn_layer(li) and cfg.ssm_state_dim:
+            ssm_state += (cfg.ssm_num_heads * cfg.ssm_head_dim
+                          * cfg.ssm_state_dim * 4
+                          + (cfg.d_inner + 2 * cfg.ssm_num_groups
+                             * cfg.ssm_state_dim) * 3 * 2)
+    total = B * (T * per_tok + ssm_state)
+    return total / min(chips, dp * tp)
+
+
+def roofline_terms(cfg: ModelConfig, shape: ShapeConfig, *, chips: int,
+                   tp: int = 16, cache_len: int = 0, wire_bytes: float = 0.0,
+                   remat: str = "full", triangular: bool = False,
+                   mla_absorbed: bool = False) -> Dict[str, float]:
+    f_total = step_flops(cfg, shape, cache_len=cache_len, remat=remat,
+                         triangular=triangular, mla_absorbed=mla_absorbed)
+    f_dev = f_total / chips
+    b_dev = hbm_bytes_per_device(cfg, shape, chips=chips, tp=tp,
+                                 cache_len=cache_len, remat=remat)
+    t_c = f_dev / PEAK_FLOPS
+    t_m = b_dev / HBM_BW
+    t_n = wire_bytes / ICI_BW
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_n, "collective"))
+    mf = model_flops(cfg, shape)
+    return {
+        "flops_per_device": f_dev,
+        "hbm_bytes_per_device": b_dev,
+        "wire_bytes_per_device": wire_bytes,
+        "compute_s": t_c,
+        "memory_s": t_m,
+        "collective_s": t_n,
+        "bottleneck": dom[1],
+        "model_flops": mf,
+        "useful_ratio": mf / max(f_total, 1.0),
+        "step_s_bound": max(t_c, t_m, t_n),
+        "roofline_fraction": t_c / max(t_c, t_m, t_n),
+        # fraction of ideal (6·N·D) model-FLOPs throughput the bound allows —
+        # the §Perf score: 1.0 means the step takes exactly model_flops/peak
+        "mfu_bound": (mf / chips / PEAK_FLOPS) / max(t_c, t_m, t_n, 1e-30),
+    }

@@ -1,0 +1,138 @@
+"""Post-SPMD HLO analysis: collective wire bytes with loop-trip correction.
+
+XLA's textual cost analysis counts each computation once; lax.scan lowers to a
+``while`` whose body holds the per-layer collectives.  We reconstruct true
+per-step totals by walking the call graph from ENTRY and multiplying each
+computation's collective bytes by the product of enclosing loop trip counts
+(parsed from the loop condition's comparison constant).
+
+Wire-byte model per op result size R on a ring of n devices (documented in
+EXPERIMENTS.md §Roofline): all-reduce 2R, all-gather/reduce-scatter/all-to-all/
+collective-permute 1R.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "s64": 8, "u64": 8, "c64": 8, "f32": 4, "s32": 4,
+                "u32": 4, "f16": 2, "bf16": 2, "s16": 2, "u16": 2, "s8": 1,
+                "u8": 1, "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLL_RE = re.compile(
+    r"= ((?:\([^)]*\))|(?:\S+\[[^\]]*\]\S*)) "
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY )?%?([\w\.\-_]+)\s*\(.*\)\s*->.*{\s*$")
+_CALL_RE = re.compile(
+    r"(?:calls=|body=|condition=|to_apply=|true_computation=|"
+    r"false_computation=)%?([\w\.\-_]+)")
+_BRANCH_RE = re.compile(r"branch_computations={([^}]*)}")
+_WHILE_RE = re.compile(r"while\(.*condition=%?([\w\.\-_]+), body=%?([\w\.\-_]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def split_computations(hlo: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    entry = None
+    for line in hlo.splitlines():
+        m = _COMP_HDR.match(line.strip()) if "{" in line else None
+        if m and ("->" in line):
+            cur = m.group(1)
+            comps[cur] = []
+            if line.lstrip().startswith("ENTRY"):
+                entry = cur
+            continue
+        if cur is not None:
+            if line.strip() == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+    if entry is not None:
+        comps["__entry__"] = comps[entry]
+    return comps
+
+
+def _comp_stats(lines: List[str]):
+    coll = defaultdict(int)
+    count = 0
+    calls: List[Tuple[str, str]] = []   # (kind, callee)
+    for ln in lines:
+        for shape_str, kind, start in _COLL_RE.findall(ln):
+            b = shape_bytes(shape_str)
+            if start:                   # async start tuple holds in+out
+                b //= 2
+            coll[kind] += b
+            count += 1
+        wm = _WHILE_RE.search(ln)
+        if wm:
+            calls.append(("while", wm.group(2), wm.group(1)))  # body, cond
+            continue
+        bm = _BRANCH_RE.search(ln)
+        if bm:
+            for c in bm.group(1).split(","):
+                calls.append(("call", c.strip().lstrip("%"), None))
+        for callee in _CALL_RE.findall(ln):
+            calls.append(("call", callee, None))
+    return coll, count, calls
+
+
+def _trip_count(lines: List[str]) -> int:
+    best = 1
+    for ln in lines:
+        for c in _CONST_RE.findall(ln):
+            v = int(c)
+            if 1 < v <= 100_000:
+                best = max(best, v)
+    return best
+
+
+def collective_wire_bytes(hlo: str) -> Dict[str, float]:
+    comps = split_computations(hlo)
+    stats = {name: _comp_stats(lines) for name, lines in comps.items()}
+
+    totals = defaultdict(float)
+    n_ops = [0]
+    seen_stack = set()
+
+    def visit(name: str, mult: float):
+        if name not in stats or name in seen_stack:
+            return
+        seen_stack.add(name)
+        coll, count, calls = stats[name]
+        for k, v in coll.items():
+            totals[k] += v * mult
+        n_ops[0] += count
+        for kind, callee, cond in calls:
+            if kind == "while":
+                trip = _trip_count(comps.get(cond, []))
+                visit(callee, mult * trip)
+            else:
+                visit(callee, mult)
+        seen_stack.discard(name)
+
+    visit("__entry__", 1.0)
+    out = dict(totals)
+    out["count"] = n_ops[0]
+    out["wire_bytes"] = (2 * out.get("all-reduce", 0)
+                         + out.get("all-gather", 0)
+                         + out.get("reduce-scatter", 0)
+                         + out.get("all-to-all", 0)
+                         + out.get("collective-permute", 0))
+    return out

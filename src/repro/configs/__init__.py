@@ -1,0 +1,33 @@
+"""Architecture registry: ``get_config(arch_id)`` for every assigned arch."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import (  # noqa: F401
+    ModelConfig, RunConfig, ShapeConfig, SHAPES, SHAPES_BY_NAME,
+    shape_applicable, smoke, pad_vocab,
+)
+
+_ARCH_MODULES: Dict[str, str] = {
+    "chameleon-34b": "repro.configs.chameleon_34b",
+    "h2o-danube-1.8b": "repro.configs.h2o_danube_1_8b",
+    "stablelm-1.6b": "repro.configs.stablelm_1_6b",
+    "deepseek-7b": "repro.configs.deepseek_7b",
+    "stablelm-3b": "repro.configs.stablelm_3b",
+    "mamba2-1.3b": "repro.configs.mamba2_1_3b",
+    "jamba-1.5-large-398b": "repro.configs.jamba_1_5_large_398b",
+    "deepseek-v2-lite-16b": "repro.configs.deepseek_v2_lite_16b",
+    "olmoe-1b-7b": "repro.configs.olmoe_1b_7b",
+    "whisper-base": "repro.configs.whisper_base",
+}
+
+
+def list_archs() -> List[str]:
+    return list(_ARCH_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(_ARCH_MODULES[arch]).CONFIG

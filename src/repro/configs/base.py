@@ -1,0 +1,258 @@
+"""Config system: model/shape/run configs for every assigned architecture.
+
+Plain frozen dataclasses (no flax/ml_collections dependency).  Every assigned
+architecture gets one module in ``repro/configs`` exporting ``CONFIG`` with the
+exact published hyper-parameters, plus a reduced ``smoke()`` variant of the same
+family used by CPU tests.  The FULL configs are only ever lowered via
+ShapeDtypeStructs in the dry-run — never allocated on this host.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+VOCAB_PAD_MULTIPLE = 2048  # padded so vocab shards evenly over the 'model' axis
+
+
+def pad_vocab(v: int, multiple: int = VOCAB_PAD_MULTIPLE) -> int:
+    return ((v + multiple - 1) // multiple) * multiple
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyper-parameters.  One instance per assigned arch."""
+
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | encdec | vlm
+    num_layers: int
+    d_model: int
+    vocab_size: int
+
+    # ---- attention ----
+    num_heads: int = 0
+    num_kv_heads: int = 0
+    head_dim: int = 0                # 0 -> d_model // num_heads
+    rope_theta: float = 10_000.0
+    rope_fraction: float = 1.0       # fraction of head dims carrying rotary
+    use_qk_norm: bool = False
+    sliding_window: int = 0          # >0 -> sliding-window attention (SWA)
+
+    # ---- MLA (deepseek-v2) ----
+    use_mla: bool = False
+    kv_lora_rank: int = 0
+    q_lora_rank: int = 0             # 0 -> no q compression (v2-lite)
+    qk_nope_dim: int = 0
+    qk_rope_dim: int = 0
+    v_head_dim: int = 0
+
+    # ---- FFN ----
+    d_ff: int = 0
+    mlp_type: str = "swiglu"         # swiglu | gelu
+
+    # ---- MoE ----
+    moe_num_experts: int = 0
+    moe_top_k: int = 0
+    moe_d_ff: int = 0                # expert hidden size (0 -> d_ff)
+    moe_num_shared: int = 0          # shared experts, deepseek style
+    moe_layer_period: int = 1        # MoE every k-th layer (hybrid stacks)
+    moe_capacity_factor: float = 1.25
+    moe_aux_loss_weight: float = 0.01
+
+    # ---- SSM (mamba2 / SSD) ----
+    ssm_state_dim: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_conv_width: int = 4
+    ssm_chunk: int = 256
+    ssm_num_groups: int = 1
+
+    # ---- hybrid (jamba) ----
+    attn_layer_period: int = 0       # attention every k-th layer; others SSM
+    attn_layer_offset: int = 0
+
+    # ---- encoder-decoder (whisper) ----
+    is_encoder_decoder: bool = False
+    num_encoder_layers: int = 0
+    encoder_seq_len: int = 1500      # whisper: 30 s of audio @ 50 fps (frontend stub)
+
+    # ---- misc ----
+    norm_type: str = "rmsnorm"       # rmsnorm | layernorm
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    frontend: str = "none"           # none | audio_stub | vq_stub
+    source: str = ""                 # provenance note
+
+    # -------- derived --------
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        if self.num_heads:
+            return self.d_model // self.num_heads
+        return 0
+
+    @property
+    def padded_vocab(self) -> int:
+        return pad_vocab(self.vocab_size)
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_num_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim if self.ssm_state_dim else 0
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def supports_long_context(self) -> bool:
+        """True iff a 500k-token decode is sub-quadratic for this arch."""
+        return self.family in ("ssm", "hybrid") or self.sliding_window > 0
+
+    def is_attn_layer(self, layer_idx: int) -> bool:
+        """Hybrid stacks: which layers carry attention (rest are SSM)."""
+        if not self.attn_layer_period:
+            return self.ssm_state_dim == 0
+        return layer_idx % self.attn_layer_period == self.attn_layer_offset
+
+    def is_moe_layer(self, layer_idx: int) -> bool:
+        if not self.moe_num_experts:
+            return False
+        return layer_idx % self.moe_layer_period == (self.moe_layer_period - 1) \
+            if self.moe_layer_period > 1 else True
+
+    def num_params(self) -> int:
+        """Analytic parameter count (used for roofline MODEL_FLOPS and sanity)."""
+        d, V = self.d_model, self.padded_vocab
+        n = V * d  # embedding
+        if not self.tie_embeddings:
+            n += d * V
+        hd = self.resolved_head_dim
+        for li in range(self.num_layers):
+            if self.is_attn_layer(li):
+                if self.use_mla:
+                    qdim = self.num_heads * (self.qk_nope_dim + self.qk_rope_dim)
+                    n += d * qdim if not self.q_lora_rank else (
+                        d * self.q_lora_rank + self.q_lora_rank * qdim)
+                    n += d * (self.kv_lora_rank + self.qk_rope_dim)
+                    n += self.kv_lora_rank * self.num_heads * (
+                        self.qk_nope_dim + self.v_head_dim)
+                    n += self.num_heads * self.v_head_dim * d
+                elif self.num_heads:
+                    n += d * self.num_heads * hd            # Q
+                    n += 2 * d * self.num_kv_heads * hd     # K, V
+                    n += self.num_heads * hd * d            # O
+            else:  # SSM layer
+                di, g, N = self.d_inner, self.ssm_num_groups, self.ssm_state_dim
+                conv_dim = di + 2 * g * N
+                n += d * (2 * di + 2 * g * N + self.ssm_num_heads)  # in_proj
+                n += conv_dim * self.ssm_conv_width                 # conv
+                n += 3 * self.ssm_num_heads + di                    # A, D, dt_bias, norm
+                n += di * d                                          # out_proj
+            # FFN
+            if self.is_moe_layer(li):
+                eff = self.moe_d_ff or self.d_ff
+                n += self.moe_num_experts * 3 * d * eff
+                n += d * self.moe_num_experts                        # router
+                if self.moe_num_shared:
+                    n += 3 * d * (self.moe_num_shared * eff)
+            elif self.d_ff:
+                mult = 3 if self.mlp_type == "swiglu" else 2
+                n += mult * d * self.d_ff
+            n += 2 * d  # norms
+        if self.is_encoder_decoder:
+            # encoder layers: self-attn + gelu FFN; decoder adds cross-attn
+            enc = self.num_encoder_layers * (
+                4 * d * self.num_heads * hd + 2 * d * self.d_ff + 2 * d)
+            cross = self.num_layers * (4 * d * self.num_heads * hd + d)
+            n += enc + cross
+        return n
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input-shape cell."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                        # train | prefill | decode
+
+
+SHAPES: Tuple[ShapeConfig, ...] = (
+    ShapeConfig("train_4k", 4_096, 256, "train"),
+    ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    ShapeConfig("long_500k", 524_288, 1, "decode"),
+)
+
+SHAPES_BY_NAME = {s.name: s for s in SHAPES}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Whether an (arch, shape) cell runs, per the assignment footnotes."""
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, "skipped: pure full-attention arch (needs sub-quadratic)"
+    return True, ""
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    """Runtime/training knobs orthogonal to the architecture."""
+    arch: str = "stablelm-1.6b"
+    shape: str = "train_4k"
+    steps: int = 100
+    learning_rate: float = 3e-4
+    weight_decay: float = 0.1
+    warmup_steps: int = 20
+    grad_clip: float = 1.0
+    optimizer: str = "adamw"         # adamw | adafactor
+    remat_policy: str = "full"       # none | minimal | full
+    microbatches: int = 1            # >1 -> gradient accumulation
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    seed: int = 0
+    grad_compression: str = "none"   # none | int8_ef
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    checkpoint_every: int = 50
+    attn_impl: str = "jnp"           # jnp | pallas (pallas = TPU target path)
+    seq_parallel: bool = True        # Megatron-SP residual sharding (train/prefill)
+    triangular_attn: bool = False    # skip fully-masked causal kv blocks
+    scan_unroll: bool = False        # calibration: unroll layer scans for costing
+
+
+def smoke(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """Reduced same-family config for CPU smoke tests (tiny widths, real structure)."""
+    changes = dict(
+        name=cfg.name + "-smoke",
+        d_model=64,
+        vocab_size=256,
+        d_ff=(128 if cfg.d_ff else 0),
+    )
+    if cfg.num_heads:
+        changes["num_heads"] = 4
+        changes["num_kv_heads"] = max(1, int(round(4 * cfg.num_kv_heads / cfg.num_heads)))
+        changes["head_dim"] = 16
+    if cfg.use_mla:
+        changes.update(kv_lora_rank=32, qk_nope_dim=16, qk_rope_dim=8,
+                       v_head_dim=16, head_dim=0)
+    if cfg.moe_num_experts:
+        changes.update(moe_num_experts=4,
+                       moe_top_k=min(2, cfg.moe_top_k),
+                       moe_d_ff=64)
+    if cfg.ssm_state_dim:
+        changes.update(ssm_state_dim=16, ssm_head_dim=16, ssm_chunk=32)
+    if cfg.attn_layer_period:
+        # one full hybrid super-block
+        changes["num_layers"] = cfg.attn_layer_period
+    elif cfg.is_encoder_decoder:
+        changes.update(num_layers=2, num_encoder_layers=2, encoder_seq_len=16)
+    else:
+        changes["num_layers"] = 2
+    if cfg.sliding_window:
+        changes["sliding_window"] = 16
+    changes.update(overrides)
+    return dataclasses.replace(cfg, **changes)

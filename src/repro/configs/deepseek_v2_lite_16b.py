@@ -1,0 +1,31 @@
+"""DeepSeek-V2-Lite (16B total / 2.4B active): MLA attention (kv_lora_rank=512,
+decoupled RoPE) + MoE with 2 shared and 64 routed experts, top-6.
+
+Deviation noted in DESIGN.md: the released model keeps layer 0 dense; we run MoE
+on all 27 layers to keep the stack scan-uniform (param delta < 1%).
+[arXiv:2405.04434]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v2-lite-16b",
+    family="moe",
+    num_layers=27,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,         # MLA: shared latent; per-head after up-projection
+    d_ff=1408,               # routed expert hidden size (spec value)
+    vocab_size=102400,
+    use_mla=True,
+    kv_lora_rank=512,
+    q_lora_rank=0,           # v2-lite has no query compression
+    qk_nope_dim=128,
+    qk_rope_dim=64,
+    v_head_dim=128,
+    moe_num_experts=64,
+    moe_top_k=6,
+    moe_d_ff=1408,
+    moe_num_shared=2,
+    norm_type="rmsnorm",
+    mlp_type="swiglu",
+    source="arXiv:2405.04434",
+)

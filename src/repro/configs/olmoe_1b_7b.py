@@ -1,0 +1,20 @@
+"""OLMoE-1B-7B: 64-expert top-8 MoE on every layer, QK-norm. [arXiv:2409.02060]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="olmoe-1b-7b",
+    family="moe",
+    num_layers=16,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=1024,
+    vocab_size=50304,
+    moe_num_experts=64,
+    moe_top_k=8,
+    moe_d_ff=1024,
+    use_qk_norm=True,
+    norm_type="rmsnorm",
+    mlp_type="swiglu",
+    source="arXiv:2409.02060",
+)

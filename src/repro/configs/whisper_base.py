@@ -1,0 +1,25 @@
+"""Whisper-base: encoder-decoder; the conv audio frontend is a STUB per the
+assignment — ``input_specs()`` feeds precomputed 512-d frame embeddings.
+
+Shape interpretation (see DESIGN.md): ``seq_len`` is the DECODER length; the
+encoder context is the native 1500 frames.  long_500k is skipped (full attn).
+[arXiv:2212.04356]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-base",
+    family="encdec",
+    num_layers=6,            # decoder layers
+    num_encoder_layers=6,
+    d_model=512,
+    num_heads=8,
+    num_kv_heads=8,
+    d_ff=2048,
+    vocab_size=51865,
+    is_encoder_decoder=True,
+    encoder_seq_len=1500,
+    norm_type="layernorm",
+    mlp_type="gelu",
+    frontend="audio_stub",
+    source="arXiv:2212.04356",
+)

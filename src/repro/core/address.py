@@ -1,0 +1,126 @@
+"""Structural + fractal address randomization — the paper's §II-C dispatch rules.
+
+The paper's two rules for a multi-beat access entering the shared memory:
+  1. *Structural*: disassemble the burst and spread beats round-robin across the
+     M clusters (split-by-4 ⇒ beat i → cluster i mod 4), then across the N SRAM
+     arrays inside the cluster — so the shortest common burst (4) already touches
+     every cluster.
+  2. *Fractal*: a second-level hash ("randomization … so the multiple beats
+     within a linear access go to a different SRAM array … lands in a different
+     memory bank") whitens which array/bank a given (cluster-local) address uses,
+     destroying pathological striding.
+
+This module is the single source of truth for that mapping.  It is reused
+verbatim by
+  - the cycle-level simulator (``core/simulator.py``)      — faithful repro,
+  - the BankedKVPool block allocator (``serving/pool.py``)  — TPU adaptation,
+  - the MoE capacity-slot permutation (``models/moe.py``)   — TPU adaptation.
+
+All functions are pure and work on numpy or jnp int32 arrays.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+# Knuth multiplicative constants (odd -> bijective mod 2^32)
+_MULT1 = np.uint32(0x9E3779B1)
+_MULT2 = np.uint32(0x85EBCA77)
+
+
+@dataclass(frozen=True)
+class MemoryGeometry:
+    """Prototype geometry from §III: X=16 masters, M=4 clusters, N=4 arrays,
+    K=16 logic banks per array, beats of 256 bit (32 B)."""
+    num_masters: int = 16
+    num_clusters: int = 4            # M  (level-1 split)
+    arrays_per_cluster: int = 4      # N  (level-2 split)
+    banks_per_array: int = 16        # K
+    sub_banks: int = 4               # isolation granules per logic bank
+    beat_bytes: int = 32             # 256-bit data width
+    total_bytes: int = 32 * 2**20    # 32 MB
+
+    @property
+    def num_arrays(self) -> int:
+        return self.num_clusters * self.arrays_per_cluster
+
+    @property
+    def num_banks(self) -> int:
+        return self.num_arrays * self.banks_per_array
+
+    @property
+    def beats_total(self) -> int:
+        return self.total_bytes // self.beat_bytes
+
+
+def _hash32(x):
+    """Cheap avalanche hash (xorshift-multiply), numpy/jnp compatible.
+    uint32 wraparound is intentional (mod-2^32 multiplicative hashing)."""
+    x = np.asarray(x, np.uint32) if not hasattr(x, "dtype") or \
+        isinstance(x, np.generic) else x
+    with np.errstate(over="ignore"):
+        x = x ^ (x >> 16)
+        x = x * _MULT1
+        x = x ^ (x >> 13)
+        x = x * _MULT2
+        x = x ^ (x >> 16)
+    return x
+
+
+def map_beat(beat_addr, geom: MemoryGeometry = MemoryGeometry()):
+    """Map a beat-granular address to (cluster, array, bank-in-array).
+
+    Guarantees (property-tested):
+      * beats 0..3 of any aligned burst-4 hit 4 distinct clusters   (rule 1)
+      * beats 0..15 of any aligned burst-16 hit 16 distinct arrays  (rule 1)
+      * any 16·K consecutive beats hit every bank of every array exactly
+        once per array-visit (rule 2: conflict-free linear access)
+    """
+    a = np.asarray(beat_addr).astype(np.int64)
+    mc = geom.num_clusters
+    na = geom.arrays_per_cluster
+    kb = geom.banks_per_array
+    cluster = a % mc
+    arr = (a // mc) % na
+    # fractal whitening of the array index by higher address bits
+    hi1 = (a // (mc * na)).astype(np.int64)
+    arr = (arr + _hash32(hi1.astype(np.uint32)).astype(np.int64)) % na
+    bank = hi1 % kb
+    hi2 = (hi1 // kb).astype(np.int64)
+    bank = (bank + _hash32((hi2 + 0x5bd1).astype(np.uint32)).astype(np.int64)) % kb
+    return cluster.astype(np.int32), arr.astype(np.int32), bank.astype(np.int32)
+
+
+def flat_bank_id(beat_addr, geom: MemoryGeometry = MemoryGeometry()):
+    """Global bank id in [0, num_banks) for a beat address."""
+    c, a, b = map_beat(beat_addr, geom)
+    return (c * geom.arrays_per_cluster + a) * geom.banks_per_array + b
+
+
+def sub_bank_id(beat_addr, geom: MemoryGeometry = MemoryGeometry()):
+    """Isolation granule: which sub-bank of its logic bank a beat lands in."""
+    a = np.asarray(beat_addr).astype(np.int64)
+    region = a // (geom.beats_total // geom.sub_banks)
+    return np.clip(region, 0, geom.sub_banks - 1).astype(np.int32)
+
+
+def fractal_permute(n: int, seed: int = 0) -> np.ndarray:
+    """Deterministic whitening permutation of range(n).
+
+    Used where the framework assigns *slots* in a shared pool (MoE capacity
+    slots, KV blocks): consumers iterating linearly get spread the same way the
+    paper spreads burst beats.  Bijection built from the same hash family.
+    """
+    idx = np.arange(n, dtype=np.uint32)
+    keys = _hash32(idx + np.uint32(seed) * _MULT2)
+    return np.argsort(keys, kind="stable").astype(np.int32)
+
+
+def interleave_across_banks(n_items: int, n_banks: int, seed: int = 0) -> np.ndarray:
+    """Assign n_items to banks: round-robin first (structural), then hash-offset
+    per round (fractal) — the paper's two-level rule as a placement policy."""
+    i = np.arange(n_items, dtype=np.int64)
+    rnd = i // n_banks
+    offs = _hash32((rnd + seed).astype(np.uint32)).astype(np.int64)
+    return ((i + offs) % n_banks).astype(np.int32)

@@ -1,0 +1,332 @@
+"""Cycle-level simulator of the many-ported banked shared memory (§II-C/§III).
+
+Faithful model of the prototype:
+  * X master ports, 256-bit (1 beat/cycle) read-return and write-data buses
+  * two-level split-by-4 dispatch: a burst fans out at 4 beats/cycle (one per
+    cluster); beat → (cluster, array, bank) via ``core.address.map_beat``
+    (structural round-robin + fractal hash)
+  * per-bank FCFS arbitration with round-robin tie-break among masters;
+    SRAMs at half the fabric clock ⇒ a bank is busy 2 fabric cycles per beat
+  * per-port outstanding-command credits (8 default; Table I sweeps 16/1) and
+    a 64-beat split/dispatch buffer providing backpressure
+  * read latency is measured from command *acceptance* (credit granted) to the
+    cycle the last beat leaves the return bus — the AXI-observable latency the
+    paper reports; AXI5 read-data chunking ⇒ beats may return out of order.
+
+Everything is a fixed-size jnp array and one ``lax.scan`` over cycles, so the
+whole Fig-4 sweep (1..16 masters) runs as a single vmapped scan.
+
+Comparator topologies (§II-A, used by benchmarks/comparators.py):
+  * ``banking='paper'``     — the proposed structure
+  * ``banking='linear'``    — monolithic region-per-bank banking (no burst
+                              splitting): masters camp on single banks
+  * ``banking='no_fractal'``— round-robin clusters but no second-level hash:
+                              power-of-two strides re-collide
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.address import MemoryGeometry, flat_bank_id, map_beat
+
+INF32 = jnp.int32(2**30)
+
+
+@dataclass(frozen=True)
+class SimParams:
+    geom: MemoryGeometry = MemoryGeometry()
+    outstanding: int = 8         # commands per port (Table I: 16 / 1)
+    split_buffer: int = 64       # beats in flight past the splitter, per port
+    cmd_latency: int = 8         # port -> bank-queue pipeline (fabric cycles)
+    ret_latency: int = 9         # bank -> port pipeline
+    bank_occupancy: int = 2      # SRAM at 500 MHz vs 1 GHz fabric
+    bank_latency: int = 2        # access latency before data heads back
+    expand_rate: int = 4         # split-by-4: beats entering fabric per cycle
+    max_burst: int = 16
+    banking: str = "paper"       # paper | linear | no_fractal
+    max_cycles: int = 200_000
+
+    @property
+    def slots_per_master(self) -> int:
+        # enough ring slots for every accepted command's beats
+        return int(2 ** np.ceil(np.log2(
+            max(self.outstanding * self.max_burst, self.split_buffer) * 2)))
+
+
+def bank_of(addr, prm: SimParams):
+    g = prm.geom
+    if prm.banking == "paper":
+        return flat_bank_id(addr, g)
+    a = np.asarray(addr).astype(np.int64)
+    if prm.banking == "linear":
+        region = g.beats_total // g.num_banks
+        return np.clip(a // region, 0, g.num_banks - 1).astype(np.int32)
+    if prm.banking == "no_fractal":  # structural split only, no hash
+        c = a % g.num_clusters
+        arr = (a // g.num_clusters) % g.arrays_per_cluster
+        bank = (a // (g.num_clusters * g.arrays_per_cluster)) % g.banks_per_array
+        return ((c * g.arrays_per_cluster + arr) * g.banks_per_array
+                + bank).astype(np.int32)
+    raise ValueError(prm.banking)
+
+
+# ---------------------------------------------------------------------------
+# Trace container: per master, padded to a common transaction count
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Trace:
+    """is_write/burst/addr: [X, N] int32 (addr in beat units; burst==0 ⇒ pad)."""
+    is_write: np.ndarray
+    burst: np.ndarray
+    addr: np.ndarray
+
+    @property
+    def num_masters(self) -> int:
+        return self.is_write.shape[0]
+
+    @property
+    def num_txns(self) -> int:
+        return self.is_write.shape[1]
+
+
+def _precompute_beats(trace: Trace, prm: SimParams):
+    """[X, N, max_burst] per-beat bank ids + valid mask (static, numpy)."""
+    X, N = trace.addr.shape
+    off = np.arange(prm.max_burst)[None, None, :]
+    beat_addr = trace.addr[..., None] + off
+    banks = bank_of(beat_addr.reshape(-1), prm).reshape(X, N, prm.max_burst)
+    valid = off < trace.burst[..., None]
+    return banks.astype(np.int32), valid
+
+
+# ---------------------------------------------------------------------------
+# The cycle scan
+# ---------------------------------------------------------------------------
+
+def simulate(trace: Trace, prm: SimParams = SimParams()) -> Dict[str, np.ndarray]:
+    """Run the sim; returns per-port and per-txn statistics (numpy)."""
+    banks_np, _ = _precompute_beats(trace, prm)
+    fn = _core_jitted(prm)
+    out = fn(jnp.asarray(trace.is_write, jnp.int32),
+             jnp.asarray(trace.burst, jnp.int32),
+             jnp.asarray(banks_np))
+    return jax.tree_util.tree_map(np.asarray, out)
+
+
+from functools import lru_cache
+
+
+@lru_cache(maxsize=32)
+def _core_jitted(prm: SimParams):
+    return jax.jit(partial(_core, prm=prm))
+
+
+def _core(tx_write, tx_burst, tx_banks, *, prm: SimParams):
+    X, N = tx_write.shape
+    P = prm.slots_per_master
+    S = X * P
+    NB = prm.geom.num_banks
+
+    master_of_slot = jnp.repeat(jnp.arange(X, dtype=jnp.int32), P)
+
+    trace_burst = tx_burst
+    state = dict(
+        now=jnp.int32(0),
+        next_txn=jnp.zeros((X,), jnp.int32),
+        outstanding=jnp.zeros((X, 2), jnp.int32),  # [:,0] read, [:,1] write
+        credits=jnp.full((X, 2), prm.split_buffer, jnp.int32),
+        beats_issued=jnp.zeros((X,), jnp.int32),
+        fwd_free=jnp.zeros((X,), jnp.int32),       # W-channel data-bus free time
+        # beat slots (ring per master, flattened [S])
+        sl_busy=jnp.zeros((S,), jnp.int32),
+        sl_bank=jnp.zeros((S,), jnp.int32),
+        sl_arrive=jnp.full((S,), INF32),           # at bank queue
+        sl_ready=jnp.full((S,), INF32),            # bank done, awaiting return
+        sl_txn=jnp.zeros((S,), jnp.int32),
+        sl_write=jnp.zeros((S,), jnp.int32),
+        bank_free=jnp.zeros((NB,), jnp.int32),
+        bank_rr=jnp.zeros((NB,), jnp.int32),
+        # per-txn bookkeeping
+        remaining=jnp.where(tx_burst > 0, tx_burst, 0).astype(jnp.int32),
+        accept_cycle=jnp.full((X, N), -1, jnp.int32),
+        complete_cycle=jnp.full((X, N), -1, jnp.int32),
+        beats_done=jnp.zeros((X,), jnp.int32),
+    )
+
+    def cycle(st, _):
+        now = st["now"]
+
+        # ---- 1. command acceptance (one per port per cycle) ----
+        nt = st["next_txn"]
+        has_txn = nt < N
+        nt_c = jnp.minimum(nt, N - 1)
+        burst = tx_burst[jnp.arange(X), nt_c]
+        is_w = tx_write[jnp.arange(X), nt_c]
+        dirn = is_w  # 0 = read, 1 = write (AXI channels are independent)
+        can = (has_txn & (burst > 0)
+               & (st["outstanding"][jnp.arange(X), dirn] < prm.outstanding)
+               & (st["credits"][jnp.arange(X), dirn] >= burst)
+               & ((is_w == 0) | (st["fwd_free"] <= now)))
+        # beat arrival times: reads expand 4/cycle at the splitter; write data
+        # is paced by the 1-beat/cycle port bus
+        offs = jnp.arange(prm.max_burst, dtype=jnp.int32)
+        pace = jnp.where(is_w[:, None] > 0, offs, offs // prm.expand_rate)
+        arrive = now + prm.cmd_latency + pace                   # [X, mb]
+        bvalid = (offs[None, :] < burst[:, None]) & can[:, None]
+        ring = (st["beats_issued"][:, None] + offs[None, :]) % P
+        flat = jnp.arange(X)[:, None] * P + ring
+        flat = jnp.where(bvalid, flat, S)                       # OOB -> drop
+        sl_busy = st["sl_busy"].at[flat.reshape(-1)].set(
+            jnp.broadcast_to(1, (X * prm.max_burst,)), mode="drop")
+        sl_bank = st["sl_bank"].at[flat.reshape(-1)].set(
+            tx_banks[jnp.arange(X)[:, None], nt_c[:, None], offs[None, :]]
+            .reshape(-1), mode="drop")
+        sl_arrive = st["sl_arrive"].at[flat.reshape(-1)].set(
+            arrive.reshape(-1), mode="drop")
+        sl_ready = st["sl_ready"].at[flat.reshape(-1)].set(
+            jnp.broadcast_to(INF32, (X * prm.max_burst,)), mode="drop")
+        sl_txn = st["sl_txn"].at[flat.reshape(-1)].set(
+            jnp.broadcast_to(nt_c[:, None], (X, prm.max_burst)).reshape(-1),
+            mode="drop")
+        sl_write = st["sl_write"].at[flat.reshape(-1)].set(
+            jnp.broadcast_to(is_w[:, None], (X, prm.max_burst)).reshape(-1),
+            mode="drop")
+        accept = st["accept_cycle"].at[jnp.arange(X), nt_c].set(
+            jnp.where(can, now, st["accept_cycle"][jnp.arange(X), nt_c]))
+        next_txn = nt + can.astype(jnp.int32)
+        outstanding = st["outstanding"].at[jnp.arange(X), dirn].add(
+            can.astype(jnp.int32))
+        credits = st["credits"].at[jnp.arange(X), dirn].add(
+            -jnp.where(can, burst, 0))
+        beats_issued = st["beats_issued"] + jnp.where(can, burst, 0)
+        fwd_free = jnp.where(can & (is_w > 0), now + burst, st["fwd_free"])
+
+        # ---- 2. per-bank arbitration (one grant per bank per cycle) ----
+        waiting = (sl_busy == 1) & (sl_arrive <= now)
+        bank_ok = st["bank_free"][sl_bank] <= now
+        elig = waiting & bank_ok
+        age = jnp.clip(now - sl_arrive, 0, 255)
+        prio = (master_of_slot - st["bank_rr"][sl_bank]) % X
+        key = ((255 - age) * X + prio) * 1                      # FCFS then RR
+        seg = jnp.where(elig, sl_bank, NB)
+        best = jax.ops.segment_min(jnp.where(elig, key, 2**30), seg,
+                                   num_segments=NB + 1)[:-1]    # [NB]
+        is_best = elig & (key == best[sl_bank])
+        # unique winner per bank: lowest slot index among is_best
+        slot_ids = jnp.arange(S, dtype=jnp.int32)
+        win_slot = jax.ops.segment_min(jnp.where(is_best, slot_ids, S),
+                                       jnp.where(is_best, sl_bank, NB),
+                                       num_segments=NB + 1)[:-1]
+        granted = is_best & (slot_ids == win_slot[sl_bank])     # [S]
+        bank_free = st["bank_free"].at[sl_bank].add(
+            jnp.where(granted, prm.bank_occupancy
+                      + jnp.maximum(0, now - st["bank_free"][sl_bank]), 0))
+        bank_rr = st["bank_rr"].at[sl_bank].add(
+            jnp.where(granted, (master_of_slot - st["bank_rr"][sl_bank]) % X
+                      + 1, 0))
+        sl_busy = jnp.where(granted, 2, sl_busy)
+        sl_ready = jnp.where(granted, now + prm.bank_occupancy
+                             + prm.bank_latency, sl_ready)
+        freed_r = jax.ops.segment_sum(
+            (granted & (sl_write == 0)).astype(jnp.int32), master_of_slot,
+            num_segments=X)
+        freed_w = jax.ops.segment_sum(
+            (granted & (sl_write == 1)).astype(jnp.int32), master_of_slot,
+            num_segments=X)
+        credits = credits.at[:, 0].add(freed_r).at[:, 1].add(freed_w)
+
+        # writes complete at grant of their last beat
+        rem_dec_w = jax.ops.segment_sum(
+            (granted & (sl_write == 1)).astype(jnp.int32),
+            master_of_slot * N + sl_txn, num_segments=X * N).reshape(X, N)
+
+        # ---- 3. read return bus: one beat per port per cycle ----
+        retq = (sl_busy == 2) & (sl_ready <= now) & (sl_write == 0)
+        rkey = jnp.clip(sl_ready, 0, 2**20) * 1
+        rbest = jax.ops.segment_min(jnp.where(retq, rkey, 2**30),
+                                    jnp.where(retq, master_of_slot, X),
+                                    num_segments=X + 1)[:-1]
+        ris = retq & (rkey == rbest[master_of_slot])
+        rwin = jax.ops.segment_min(jnp.where(ris, slot_ids, S),
+                                   jnp.where(ris, master_of_slot, X),
+                                   num_segments=X + 1)[:-1]
+        returned = ris & (slot_ids == rwin[master_of_slot])
+        sl_busy = jnp.where(returned, 0, sl_busy)
+        beats_done = st["beats_done"] + jax.ops.segment_sum(
+            returned.astype(jnp.int32), master_of_slot, num_segments=X)
+        rem_dec_r = jax.ops.segment_sum(
+            returned.astype(jnp.int32),
+            master_of_slot * N + sl_txn, num_segments=X * N).reshape(X, N)
+
+        # write slots free immediately after grant (no return path)
+        sl_busy = jnp.where((sl_busy == 2) & (sl_write == 1), 0, sl_busy)
+
+        remaining = st["remaining"] - rem_dec_w - rem_dec_r
+        just_done = (remaining == 0) & (st["remaining"] > 0)
+        complete = jnp.where(just_done, now + prm.ret_latency,
+                             st["complete_cycle"])
+        done_r = jnp.sum(just_done & (tx_write == 0), axis=1)
+        done_w = jnp.sum(just_done & (tx_write == 1), axis=1)
+        outstanding = outstanding.at[:, 0].add(-done_r).at[:, 1].add(-done_w)
+
+        new_st = dict(st, now=now + 1, next_txn=next_txn,
+                      outstanding=outstanding, credits=credits,
+                      beats_issued=beats_issued, fwd_free=fwd_free,
+                      sl_busy=sl_busy, sl_bank=sl_bank, sl_arrive=sl_arrive,
+                      sl_ready=sl_ready, sl_txn=sl_txn, sl_write=sl_write,
+                      bank_free=bank_free, bank_rr=bank_rr,
+                      remaining=remaining, accept_cycle=accept,
+                      complete_cycle=complete, beats_done=beats_done)
+        return new_st, None
+
+    state, _ = jax.lax.scan(cycle, state, None, length=prm.max_cycles)
+    return _metrics(state, tx_burst, tx_write, prm)
+
+
+def _metrics(st, burst, is_w, prm: SimParams) -> Dict[str, jnp.ndarray]:
+    real = burst > 0
+    done = st["complete_cycle"] >= 0
+    lat = (st["complete_cycle"] - st["accept_cycle"]).astype(jnp.float32)
+    r = real & done & (is_w == 0)
+    w = real & done & (is_w == 1)
+    read_lat = jnp.where(r, lat, 0.0)
+    write_lat = jnp.where(w, lat, 0.0)
+    n_r = jnp.maximum(jnp.sum(r, axis=1), 1)
+    n_w = jnp.maximum(jnp.sum(w, axis=1), 1)
+    # per-direction port throughput: beats delivered per active cycle on that
+    # AXI channel (R return bus / W data bus are independent, 1 beat/cycle)
+    def tput(sel):
+        first = jnp.min(jnp.where(sel, st["accept_cycle"], INF32), axis=1)
+        last = jnp.max(jnp.where(sel, st["complete_cycle"], -1), axis=1)
+        beats = jnp.sum(jnp.where(sel, burst, 0), axis=1)
+        span = jnp.maximum(last - first, 1).astype(jnp.float32)
+        return jnp.where(jnp.sum(sel, 1) > 0, beats / span, 0.0)
+
+    active = jnp.sum(real, axis=1) > 0
+    return {
+        "throughput": tput(real & done),
+        "read_throughput": tput(r),
+        "write_throughput": tput(w),
+        "read_lat_avg": jnp.where(jnp.sum(r, 1) > 0,
+                                  jnp.sum(read_lat, 1) / n_r, 0.0),
+        "read_lat_max": jnp.max(jnp.where(r, lat, 0.0), axis=1),
+        "write_lat_avg": jnp.where(jnp.sum(w, 1) > 0,
+                                   jnp.sum(write_lat, 1) / n_w, 0.0),
+        "write_lat_max": jnp.max(jnp.where(w, lat, 0.0), axis=1),
+        "all_done": jnp.all(jnp.where(real, done, True)),
+        "beats_done": st["beats_done"],
+        "cycles": st["now"],
+        "complete_cycle": st["complete_cycle"],
+        "accept_cycle": st["accept_cycle"],
+    }
+
+
+

@@ -1,0 +1,158 @@
+"""Traffic generators for the paper's experiments (§III-A).
+
+All generators return a :class:`Trace` ([X, N] arrays, beat-granular
+addresses).  ``full_duplex`` splits each master into an independent read port
+and write port (AXI R/W channels issue independently — modeled as 2X internal
+ports, matching the replicated per-channel datapaths of the design).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.address import MemoryGeometry
+from repro.core.simulator import Trace
+
+BEAT = 32  # bytes per 256-bit beat
+
+
+def _pad(rows, n=None):
+    n = n or max(len(r) for r in rows)
+    out = np.zeros((len(rows), n), np.int32)
+    for i, r in enumerate(rows):
+        out[i, :len(r)] = r
+    return out
+
+
+def random_uniform(num_masters: int, num_txns: int, *, burst: int = 16,
+                   read_fraction: float = 0.5, seed: int = 0,
+                   geom: MemoryGeometry = MemoryGeometry(),
+                   full_duplex: bool = True) -> Trace:
+    """Fig. 4 traffic: random beat-aligned addresses, 100 % injection."""
+    rng = np.random.default_rng(seed)
+    hi = geom.beats_total - burst
+
+    def rows(n, is_w):
+        return (np.full((num_masters, n), is_w, np.int32),
+                np.full((num_masters, n), burst, np.int32),
+                rng.integers(0, hi, (num_masters, n)).astype(np.int32))
+
+    if not full_duplex:
+        iw = (rng.random((num_masters, num_txns)) >= read_fraction).astype(np.int32)
+        b = np.full((num_masters, num_txns), burst, np.int32)
+        a = rng.integers(0, hi, (num_masters, num_txns)).astype(np.int32)
+        return Trace(iw, b, a)
+    n_r = int(num_txns * read_fraction)
+    n_w = num_txns - n_r
+    n = max(n_r, n_w)
+    iw_r, b_r, a_r = rows(n, 0)
+    iw_w, b_w, a_w = rows(n, 1)
+    b_r[:, n_r:] = 0
+    b_w[:, n_w:] = 0
+    return Trace(np.concatenate([iw_r, iw_w]), np.concatenate([b_r, b_w]),
+                 np.concatenate([a_r, a_w]))
+
+
+def bulk_linear(num_masters: int, payload_bytes: int, *, burst: int = 16,
+                is_write: bool = False, outstanding_region: bool = True,
+                geom: MemoryGeometry = MemoryGeometry()) -> Trace:
+    """Fig. 5 traffic: every master streams one linear payload from its own
+    non-overlapping region (isolation requirement)."""
+    beats = payload_bytes // BEAT
+    n = int(np.ceil(beats / burst))
+    region = geom.beats_total // max(num_masters, 1)
+    rows_b, rows_a, rows_w = [], [], []
+    for m in range(num_masters):
+        base = m * region
+        addrs = base + np.arange(n) * burst
+        rows_a.append(addrs)
+        rows_b.append(np.full(n, burst))
+        rows_w.append(np.full(n, int(is_write)))
+    return Trace(_pad(rows_w), _pad(rows_b), _pad(rows_a))
+
+
+# ---------------------------------------------------------------------------
+# ML / ADAS traces (Fig. 6/7)
+# ---------------------------------------------------------------------------
+
+def ssd_net_trace(master: int, *, region_beats: int, seed: int = 0,
+                  max_txns: int = 4000) -> Tuple[np.ndarray, ...]:
+    """Single-shot-detection-style trace: per-layer feature maps 4 KB–260 KB,
+    strided row re-reads (a portion of a line, then jump to the next line),
+    weights read linearly, outputs written back; bursts of 4/8."""
+    rng = np.random.default_rng(seed + master)
+    iw, b, a = [], [], []
+    base = master * region_beats
+    # plausible SSD300 layer pyramid (feature bytes halve, channels grow)
+    layer_kb = [260, 190, 128, 96, 64, 32, 16, 8, 4]
+    for li, kb in enumerate(layer_kb):
+        feat_beats = kb * 1024 // BEAT
+        line = max(16, feat_beats // 38)        # ~38 rows per map
+        burst = 4 if li % 2 == 0 else 8
+        # read features: part of a line, jump to next line (bank-conflict prone)
+        for row in range(0, 38):
+            off = (row * line) % max(region_beats - 64, 1)
+            frac = rng.integers(line // 2, line + 1)
+            for chunk in range(0, int(frac), burst):
+                iw.append(0); b.append(burst)
+                a.append(base + (off + chunk) % (region_beats - 16))
+        # weights: linear read, burst 8
+        w_beats = min(feat_beats // 2, 2048)
+        for chunk in range(0, w_beats, 8):
+            iw.append(0); b.append(8)
+            a.append(base + (region_beats // 2 + chunk) % (region_beats - 16))
+        # write activations out, burst 8
+        for chunk in range(0, feat_beats // 2, 8):
+            iw.append(1); b.append(8)
+            a.append(base + (region_beats // 3 + chunk) % (region_beats - 16))
+        if len(iw) > max_txns:
+            break
+    return (np.array(iw[:max_txns]), np.array(b[:max_txns]),
+            np.array(a[:max_txns]))
+
+
+def roi_image_trace(master: int, *, region_beats: int, seed: int = 0,
+                    max_txns: int = 4000) -> Tuple[np.ndarray, ...]:
+    """1080p YUV422 ROI trace: continuous line-after-line access across the
+    full ROI (2 MB clip), burst 16, alternating read-in / write-out."""
+    line_beats = 1920 * 2 // BEAT                 # 120 beats per line
+    rows = min(1080, (region_beats // line_beats) - 1)
+    iw, b, a = [], [], []
+    base = master * region_beats
+    for r in range(rows):
+        off = r * line_beats
+        for chunk in range(0, line_beats, 16):
+            iw.append(0); b.append(16); a.append(base + off + chunk)
+        if len(iw) > max_txns:
+            break
+    # write a processed half-resolution copy
+    for r in range(0, rows, 2):
+        off = region_beats // 2 + r * line_beats // 2
+        for chunk in range(0, line_beats // 2, 16):
+            iw.append(1); b.append(16); a.append(base + off + chunk)
+        if len(iw) > max_txns:
+            break
+    return (np.array(iw[:max_txns]), np.array(b[:max_txns]),
+            np.array(a[:max_txns]))
+
+
+def adas_mixed_trace(num_masters: int = 16, *, max_txns: int = 3000,
+                     geom: MemoryGeometry = MemoryGeometry(),
+                     seed: int = 0) -> Trace:
+    """Fig. 6/7 workload: masters 0-7 run the SSD detection net, masters 8-15
+    stream camera ROIs; each master owns a disjoint 2 MB region."""
+    region = geom.beats_total // num_masters
+    rows = []
+    for m in range(num_masters):
+        if m < num_masters // 2:
+            rows.append(ssd_net_trace(m, region_beats=region, seed=seed,
+                                      max_txns=max_txns))
+        else:
+            rows.append(roi_image_trace(m, region_beats=region, seed=seed,
+                                        max_txns=max_txns))
+    n = max(len(r[0]) for r in rows)
+    iw = _pad([r[0] for r in rows], n)
+    b = _pad([r[1] for r in rows], n)
+    a = _pad([r[2] for r in rows], n)
+    return Trace(iw, b, a)

@@ -1,0 +1,207 @@
+"""Logical-axis → mesh-axis sharding rules (MaxText-style), per arch × shape.
+
+Params carry *logical* axis names (see ParamSpec); here they resolve to mesh
+axes.  Defaults implement:
+  - TP over 'model' for heads / mlp / vocab / experts,
+  - FSDP (ZeRO-3) over 'data' for the d_model dim of every weight at training
+    (gathers happen per-layer inside the scan),
+  - DP over ('pod','data') for batch,
+  - decode KV-cache sequence dim over 'model' (long_500k: ('data','model')).
+
+Per-arch adjustments are *computed*, not hand-listed: any axis whose dim does
+not divide its mesh axes falls back to replication (e.g. whisper's 8 heads on a
+16-way 'model' axis).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return math.prod(mesh.shape[a] for a in axes)
+
+
+def param_rules(cfg: ModelConfig, mesh: Mesh, *, fsdp: bool) -> Dict[str, Any]:
+    """Logical-axis resolution for parameters."""
+    rules: Dict[str, Any] = {
+        "vocab": "model",
+        "embed": "data" if fsdp else None,
+        "embed_table": None,         # see param_specs: gather-friendly
+        "heads": "model",
+        "kv_heads": "model",
+        "head_dim": None,
+        "mlp": "model",
+        "expert": "model",
+        "expert_mlp": "data" if fsdp else None,
+    }
+    return rules
+
+
+def _divisible(dim: int, mesh: Mesh, axes) -> bool:
+    return dim % axis_size(mesh, axes) == 0
+
+
+def spec_for_param(spec_axes: Tuple[Optional[str], ...], shape: Tuple[int, ...],
+                   rules: Dict[str, Any], mesh: Mesh) -> P:
+    """Resolve one param's logical axes, degrading to replication when a dim
+    does not divide the mesh axis (and never using one mesh axis twice)."""
+    used = set()
+    out = []
+    for dim, ax in zip(shape, spec_axes):
+        m = rules.get(ax) if ax is not None else None
+        if m is None:
+            out.append(None)
+            continue
+        maxes = (m,) if isinstance(m, str) else tuple(m)
+        if any(a in used for a in maxes) or not _divisible(dim, mesh, maxes):
+            out.append(None)
+            continue
+        used.update(maxes)
+        out.append(m)
+    return P(*out)
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, *, fsdp: bool):
+    """NamedSharding pytree matching param_specs(cfg)."""
+    from repro.models.layers import ParamSpec
+    from repro.models.model import param_specs
+    rules = param_rules(cfg, mesh, fsdp=fsdp)
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, spec_for_param(s.axes, s.shape, rules, mesh)),
+        param_specs(cfg), is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+# ---------------------------------------------------------------------------
+# Activation constraints (registered via models.sharding_hooks)
+# ---------------------------------------------------------------------------
+
+def make_activation_sharder(mesh: Mesh, *, seq_parallel: bool = False):
+    """seq_parallel: Megatron-SP — the residual stream between blocks lives
+    sharded over ('model' × seq); GSPMD inserts the all-gather before each
+    block and the reduce-scatter after.  16× less live activation memory."""
+    dp = dp_axes(mesh)
+    tp = mesh.shape["model"]
+
+    def shard(x, kind: str):
+        if kind == "resid":
+            sp = "model" if (seq_parallel and x.ndim >= 3
+                             and x.shape[1] % tp == 0) else None
+            spec = P(dp, sp, *([None] * (x.ndim - 2)))
+        elif kind == "logits":
+            spec = P(dp, None, "model")
+        elif kind == "moe_buf":        # [groups, experts, capacity, d]
+            spec = P(dp, "model", None, None)
+        elif kind == "moe_tokens":     # [groups, tokens, d]
+            spec = P(dp, None, None)
+        elif kind == "batch0":         # pin dim 0 to dp; rest stays free
+            U = P.UNCONSTRAINED
+            spec = P(dp, *([U] * (x.ndim - 1)))
+        elif kind == "attn_io":        # attention operands: batch over dp,
+            # seq FULL (gathered from SP once — otherwise GSPMD re-gathers
+            # inside every kv-block scan step), heads free
+            U = P.UNCONSTRAINED
+            spec = P(dp, None, *([U] * (x.ndim - 2)))
+        else:
+            return x
+        if x.shape[0] % axis_size(mesh, dp) != 0:
+            return x                   # e.g. batch-1 long-context cells
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return shard
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache shardings
+# ---------------------------------------------------------------------------
+
+def batch_shardings(cfg: ModelConfig, mesh: Mesh, batch_size: int) -> dict:
+    dp = dp_axes(mesh)
+    bspec = dp if batch_size % axis_size(mesh, dp) == 0 else (
+        "data" if batch_size % mesh.shape["data"] == 0 else None)
+    tok = NamedSharding(mesh, P(bspec, None))
+    out = {"tokens": tok}
+    if cfg.is_encoder_decoder:
+        out["frames"] = NamedSharding(mesh, P(bspec, None, None))
+    return out
+
+
+def label_sharding(mesh: Mesh, batch_size: int):
+    dp = dp_axes(mesh)
+    bspec = dp if batch_size % axis_size(mesh, dp) == 0 else None
+    return NamedSharding(mesh, P(bspec, None))
+
+
+def cache_pspecs(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig,
+                 batch_size: int, cache_len: int):
+    """PartitionSpec pytree matching init_cache(cfg, ...) output structure."""
+    dp = dp_axes(mesh)
+    b = dp if batch_size % axis_size(mesh, dp) == 0 else None
+    long_ctx = shape.name == "long_500k"
+    seq_ax: Any = ("data", "model") if long_ctx else "model"
+    if not _divisible(cache_len, mesh, seq_ax):
+        seq_ax = "model" if _divisible(cache_len, mesh, "model") else None
+    heads_ok = cfg.ssm_state_dim and _divisible(cfg.ssm_num_heads, mesh, "model")
+    h_ax = "model" if heads_ok else None
+    g_ax = None  # kv heads of the cache stay replicated; seq carries 'model'
+
+    def gqa(leading=()):
+        ld = tuple(None for _ in leading)
+        return {
+            "k": P(*ld, b, seq_ax, g_ax, None),
+            "v": P(*ld, b, seq_ax, g_ax, None),
+            "pos": P(*ld, b, seq_ax),
+        }
+
+    def ssm_tree(leading=()):
+        ld = tuple(None for _ in leading)
+        conv_ax = "model" if _divisible(
+            cfg.d_inner + 2 * cfg.ssm_num_groups * cfg.ssm_state_dim,
+            mesh, "model") else None
+        return {
+            "ssm": P(*ld, b, h_ax, None, None),
+            "conv": P(*ld, b, None, conv_ax),
+        }
+
+    if cfg.family == "hybrid":
+        return {"attn": gqa((0,)), "ssm": ssm_tree((0, 1))}
+    if cfg.family == "ssm":
+        return ssm_tree((0,))
+    if cfg.is_encoder_decoder:
+        tree = gqa((0,))
+        tree["ck"] = P(None, b, None, None, None)
+        tree["cv"] = P(None, b, None, None, None)
+        return tree
+    if cfg.use_mla:
+        return {
+            "c_kv": P(None, b, seq_ax, None),
+            "k_pe": P(None, b, seq_ax, None),
+            "pos": P(None, b, seq_ax),
+        }
+    return gqa((0,))
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig,
+                    batch_size: int, cache_len: int):
+    return jax.tree_util.tree_map(
+        lambda p: NamedSharding(mesh, p),
+        cache_pspecs(cfg, mesh, shape, batch_size, cache_len),
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

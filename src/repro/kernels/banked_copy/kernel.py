@@ -1,0 +1,58 @@
+"""Pallas TPU banked burst-scatter: the paper's §II-C dispatch rules as a DMA
+kernel.
+
+A request's contiguous KV "burst" ([n_blocks, bs, W] of fresh tokens) is
+disassembled and each block ("beat") lands at the pool slot the fractal
+placement policy chose (block_table, computed by serving/pool.py using
+``core.address``).  The table is a scalar-prefetch operand feeding the OUTPUT
+BlockSpec index_map — i.e. the address decode happens in the dispatch stage,
+before the data moves, exactly like the RTL's splitter.  With
+``input_output_aliases`` the pool is updated in place; grid steps whose table
+entry is −1 re-write slot of the previous step?  No: they are redirected to a
+reserved scratch slot (pool row NB) so short requests are safe.
+
+Double buffering of the in-flight beat (fabric at 2× SRAM clock, §III-B) is
+Pallas' default two-stage DMA pipeline.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(tbl_ref, new_ref, pool_in_ref, pool_ref):
+    pool_ref[...] = new_ref[0]
+
+
+def banked_copy(pool, new_kv, block_table, *, interpret: bool = False):
+    """pool: [NB, bs, W]; new_kv: [B, nblk, bs, W]; block_table: [B, nblk].
+    Returns the updated pool (aliased in place on TPU)."""
+    NB, bs, W = pool.shape
+    B, nblk = block_table.shape
+    # reserve one trash row for -1 entries
+    pool_x = jnp.concatenate([pool, jnp.zeros((1, bs, W), pool.dtype)], 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, nblk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bs, W), lambda b, j, tbl: (b, j, 0, 0)),
+            pl.BlockSpec(
+                (1, bs, W),
+                lambda b, j, tbl: (jnp.where(tbl[b, j] >= 0, tbl[b, j], NB),
+                                   0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, bs, W),
+            lambda b, j, tbl: (jnp.where(tbl[b, j] >= 0, tbl[b, j], NB),
+                               0, 0)),
+    )
+    out = pl.pallas_call(
+        _kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(pool_x.shape, pool.dtype),
+        input_output_aliases={2: 0},
+        interpret=interpret,
+    )(block_table, new_kv, pool_x)
+    return out[:NB]

@@ -1,0 +1,13 @@
+"""jit wrapper for the banked burst-scatter kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.banked_copy.kernel import banked_copy as _kernel
+
+
+@partial(jax.jit, static_argnames=("interpret",), donate_argnums=(0,))
+def banked_copy(pool, new_kv, block_table, *, interpret: bool = False):
+    return _kernel(pool, new_kv, block_table, interpret=interpret)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the banked burst-scatter (split-dispatch) kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def banked_copy_ref(pool, new_kv, block_table):
+    """Scatter fresh KV 'bursts' into the banked pool.
+
+    pool:        [NB, bs, W]   existing pool contents
+    new_kv:      [B, n_blocks, bs, W]  contiguous per-request data ("burst")
+    block_table: [B, n_blocks] int32, −1 = skip (short request)
+    Returns updated pool; later writes win on collisions (tests use unique
+    tables, matching the allocator's ownership guarantee)."""
+    NB = pool.shape[0]
+    B, nblk = block_table.shape
+    flat_idx = block_table.reshape(-1)
+    flat_new = new_kv.reshape(B * nblk, *new_kv.shape[2:])
+    # redirect −1 entries to a trash row (mirrors the kernel; avoids the
+    # unspecified ordering of duplicate-index scatter-set)
+    idx = jnp.where(flat_idx >= 0, flat_idx, NB)
+    pool_x = jnp.concatenate(
+        [pool, jnp.zeros((1, *pool.shape[1:]), pool.dtype)], 0)
+    return pool_x.at[idx].set(flat_new)[:NB]

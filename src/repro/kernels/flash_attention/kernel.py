@@ -1,0 +1,109 @@
+"""Pallas TPU flash-attention forward kernel.
+
+Tiling: grid (batch·heads, q blocks, kv blocks); kv is the innermost
+(sequential) axis so the online-softmax state lives in VMEM scratch across kv
+steps.  Blocks are MXU-aligned (multiples of 128 on the contraction dims).
+GQA is expressed in the BlockSpec index maps: the kv block index is
+``bh // q_per_kv`` — no materialized head broadcast.
+
+The TPU backward mirrors ``models/attention._flash_vjp_bwd`` (recompute per kv
+block); on this CPU container the kernel is validated in interpret mode
+against ``ref.py`` (see tests/test_kernel_flash.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e9
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                scale: float, causal: bool, window: int,
+                q_block: int, kv_block: int, nk: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)                    # [qb, D]
+    k = k_ref[0].astype(jnp.float32)                    # [kb, D]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    qpos = qi * q_block + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (q_block, kv_block), 0)
+    kpos = kj * kv_block + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (q_block, kv_block), 1)
+    ok = jnp.ones((q_block, kv_block), jnp.bool_)
+    if causal:
+        ok &= kpos <= qpos
+    if window:
+        ok &= (qpos - kpos) < window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+    v = v_ref[0].astype(jnp.float32)
+    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * alpha + pv
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(kj == nk - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-20)).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0,
+                        scale: float | None = None,
+                        q_block: int = 256, kv_block: int = 512,
+                        interpret: bool = False) -> jax.Array:
+    """q: [BH, S, D]; k/v: [BG, T, D] with BH = BG·m (GQA).  Returns [BH,S,D].
+
+    S, T are padded to block multiples by the caller (ops.py)."""
+    BH, S, D = q.shape
+    BG, T, _ = k.shape
+    assert BH % BG == 0
+    m = BH // BG
+    q_block = min(q_block, S)
+    kv_block = min(kv_block, T)
+    assert S % q_block == 0 and T % kv_block == 0
+    nq, nk = S // q_block, T // kv_block
+    scale = scale if scale is not None else D ** -0.5
+
+    kernel = functools.partial(_fwd_kernel, scale=scale, causal=causal,
+                               window=window, q_block=q_block,
+                               kv_block=kv_block, nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, q_block, D), lambda bh, qi, kj: (bh, qi, 0)),
+            pl.BlockSpec((1, kv_block, D), lambda bh, qi, kj: (bh // m, kj, 0)),
+            pl.BlockSpec((1, kv_block, D), lambda bh, qi, kj: (bh // m, kj, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_block, D), lambda bh, qi, kj: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_block, D), jnp.float32),
+            pltpu.VMEM((q_block, 1), jnp.float32),
+            pltpu.VMEM((q_block, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

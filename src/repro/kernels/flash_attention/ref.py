@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e9
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int = 0,
+                  scale: float | None = None) -> jax.Array:
+    """q: [BH, S, D], k/v: [BH, T, D] (kv heads pre-broadcast).  f32 math."""
+    BH, S, D = q.shape
+    T = k.shape[1]
+    scale = scale if scale is not None else D ** -0.5
+    s = jnp.einsum("bqd,btd->bqt", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qp = jnp.arange(S)[:, None]
+    tp = jnp.arange(T)[None, :]
+    ok = jnp.ones((S, T), bool)
+    if causal:
+        ok &= tp <= qp
+    if window:
+        ok &= (qp - tp) < window
+    s = jnp.where(ok[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqt,btd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,100 @@
+"""Pallas TPU paged decode attention over the banked KV pool.
+
+The paper's split-dispatch, kernel-side: each request (master) gathers its KV
+"beats" from blocks scattered across the pool by the fractal placement policy
+(serving/pool.py).  The block table rides in as a *scalar-prefetch* operand, so
+the KV pool's BlockSpec index_map dereferences it — the DMA engine fetches
+exactly the blocks the request owns, in table order, while compute overlaps
+the next fetch (the paper's 1 GHz fabric / 500 MHz SRAM double-buffering,
+§III-B, maps to this 2-deep pipelining).
+
+Grid: (batch, kv_blocks_per_seq).  Online softmax state in VMEM scratch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e9
+
+
+def _kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+            acc_ref, m_ref, l_ref, *, scale, bs, nb, num_heads, m_per_kv):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    valid_block = tbl_ref[b, j] >= 0
+
+    @pl.when(valid_block)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)                 # [H, D]
+        k = k_ref[0, :, 0].astype(jnp.float32)           # [bs, D]  (one group)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        tok = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)[0]
+        ok = tok < len_ref[b]
+        s = jnp.where(ok[None, :], s, NEG_INF)           # [H, bs]
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha + pv
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+
+    @pl.when(j == nb - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-20)).astype(o_ref.dtype)
+
+
+def paged_attention_kernel(q, k_pool, v_pool, block_table, lengths, *,
+                           scale=None, interpret: bool = False):
+    """q: [B, H, D] (single kv group per call — ops.py loops groups);
+    pools: [NB, bs, 1, D]; block_table: [B, mb]; lengths: [B]."""
+    B, H, D = q.shape
+    NB, bs, G, _ = k_pool.shape
+    assert G == 1
+    mb = block_table.shape[1]
+    scale = scale if scale is not None else D ** -0.5
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, mb),
+        in_specs=[
+            pl.BlockSpec((1, H, D), lambda b, j, tbl, ln: (b, 0, 0)),
+            pl.BlockSpec((1, bs, 1, D),
+                         lambda b, j, tbl, ln: (jnp.maximum(tbl[b, j], 0),
+                                                0, 0, 0)),
+            pl.BlockSpec((1, bs, 1, D),
+                         lambda b, j, tbl, ln: (jnp.maximum(tbl[b, j], 0),
+                                                0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H, D), lambda b, j, tbl, ln: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((H, D), jnp.float32),
+            pltpu.VMEM((H, 1), jnp.float32),
+            pltpu.VMEM((H, 1), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(_kernel, scale=scale, bs=bs, nb=mb,
+                               num_heads=H, m_per_kv=H)
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        interpret=interpret,
+    )(block_table, lengths, q, k_pool, v_pool)

@@ -1,0 +1,29 @@
+"""jit wrapper: GQA loop over kv groups + dtype handling."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.paged_attention.kernel import paged_attention_kernel
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q, k_pool, v_pool, block_table, lengths, *,
+                    interpret: bool = False):
+    """q: [B, H, D]; pools: [NB, bs, G, D]; block_table [B, mb]; lengths [B].
+
+    GQA: the H query heads are split into G groups of m; each group attends
+    to its own pool slice (separate kernel launch per group — groups are
+    embarrassingly parallel and XLA runs them concurrently)."""
+    B, H, D = q.shape
+    G = k_pool.shape[2]
+    m = H // G
+    outs = []
+    for g in range(G):
+        outs.append(paged_attention_kernel(
+            q[:, g * m:(g + 1) * m, :],
+            k_pool[:, :, g:g + 1, :], v_pool[:, :, g:g + 1, :],
+            block_table, lengths, interpret=interpret))
+    return jnp.concatenate(outs, axis=1)

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for paged decode attention over the BankedKVPool."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e9
+
+
+def paged_attention_ref(q, k_pool, v_pool, block_table, lengths, *,
+                        scale=None):
+    """q: [B, H, D]; pools: [NB, bs, G, D]; block_table: [B, max_blocks] int32
+    (−1 = unused); lengths: [B] tokens valid per sequence.  Returns [B, H, D].
+    """
+    B, H, D = q.shape
+    NB, bs, G, _ = k_pool.shape
+    mb = block_table.shape[1]
+    scale = scale if scale is not None else D ** -0.5
+    m = H // G
+    tbl = jnp.maximum(block_table, 0)
+    k = k_pool[tbl]                       # [B, mb, bs, G, D]
+    v = v_pool[tbl]
+    k = k.reshape(B, mb * bs, G, D)
+    v = v.reshape(B, mb * bs, G, D)
+    pos = (jnp.arange(mb * bs)[None, :] < lengths[:, None]) \
+        & (jnp.repeat(block_table >= 0, bs, axis=1))
+    qg = q.reshape(B, G, m, D).astype(jnp.float32)
+    s = jnp.einsum("bgmd,btgd->bgmt", qg, k.astype(jnp.float32)) * scale
+    s = jnp.where(pos[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgmt,btgd->bgmd", p, v.astype(jnp.float32))
+    return out.reshape(B, H, D).astype(q.dtype)

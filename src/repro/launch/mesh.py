@@ -1,0 +1,33 @@
+"""Production mesh factory.
+
+A FUNCTION (not a module-level constant) so importing this module never touches
+jax device state.  Single pod: 16×16 = 256 chips (TPU v5e pod slice); multi-pod
+adds a leading 'pod' axis (2 pods = 512 chips, pod axis mapped across DCN).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices, found {len(devices)} — "
+            "the dry-run must set XLA_FLAGS=--xla_force_host_platform_device_count"
+            " before any jax import (see launch/dryrun.py)")
+    return jax.make_mesh(shape, axes, devices=devices[:need])
+
+
+def make_host_mesh() -> jax.sharding.Mesh:
+    """Degenerate 1×1 mesh over the real local device (smoke tests/examples)."""
+    return jax.make_mesh((1, 1), ("data", "model"), devices=jax.devices()[:1])
+
+
+def data_parallel_axes(mesh: jax.sharding.Mesh) -> tuple:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

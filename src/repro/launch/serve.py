@@ -1,0 +1,58 @@
+"""Serving launcher: batched decode with the BankedKVPool engine.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch mamba2-1.3b --smoke \
+      --requests 8
+
+As with train.py, full-scale serving needs the TPU runtime; --smoke exercises
+the production control flow (continuous batching, QoS admission, block
+ownership) on the local device.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.configs import get_config, smoke
+from repro.models import model as M
+from repro.serving.engine import ServingEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-1.6b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-new-tokens", type=int, default=8)
+    args = ap.parse_args()
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke(cfg)
+    else:
+        raise SystemExit("full-scale serving needs a TPU runtime; use --smoke "
+                         "here or launch/dryrun.py for the production mesh")
+    params = M.init_params(cfg, 0)
+    eng = ServingEngine(cfg, params, max_batch=args.max_batch, max_len=64,
+                        block_size=8)
+    rng = np.random.default_rng(0)
+    reqs = [eng.submit(rng.integers(0, cfg.vocab_size,
+                                    int(rng.integers(4, 16))),
+                       max_new_tokens=args.max_new_tokens)
+            for _ in range(args.requests)]
+    t0 = time.time()
+    steps = 0
+    while (eng.queue or any(r is not None for r in eng.slot_req)) \
+            and steps < 1000:
+        eng.step()
+        steps += 1
+    dt = time.time() - t0
+    toks = sum(len(r.out_tokens) for r in reqs)
+    print(f"served {sum(r.done for r in reqs)}/{len(reqs)} requests, "
+          f"{toks} tokens, {steps} engine steps, {dt:.1f}s "
+          f"({toks/dt:.1f} tok/s); pool imbalance {eng.pool.imbalance():.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,181 @@
+"""Cell builder: (arch × input-shape × mesh) → abstract args + sharding trees.
+
+``build_cell`` is the single entry point used by the dry-run, the roofline
+benchmarks and the perf loop.  Nothing here allocates device memory — inputs
+are ShapeDtypeStructs and params come from ``abstract_params``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.configs.base import (ModelConfig, RunConfig, ShapeConfig,
+                                SHAPES_BY_NAME, shape_applicable)
+from repro.distributed import sharding as SH
+from repro.models import model as M
+from repro.models.sharding_hooks import set_activation_sharder
+from repro.train import step as step_mod
+
+
+def default_run_config(arch: str, shape: str = "train_4k", **overrides) -> RunConfig:
+    """Per-arch runtime defaults: the 398B hybrid trains with Adafactor
+    (AdamW's 8 bytes/param of moments would not fit 256 chips; see DESIGN.md)."""
+    kw: Dict[str, Any] = dict(arch=arch, shape=shape)
+    if arch == "jamba-1.5-large-398b":
+        kw["optimizer"] = "adafactor"
+        kw["remat_policy"] = "full"
+    kw.update(overrides)
+    return RunConfig(**kw)
+
+
+def serve_needs_fsdp(cfg: ModelConfig, mesh: Mesh) -> bool:
+    """bf16 weights must fit per-device HBM with TP-only sharding, else FSDP."""
+    tp = mesh.shape["model"]
+    return cfg.num_params() * 2 / tp > 8e9
+
+
+@dataclass
+class Cell:
+    arch: str
+    shape: ShapeConfig
+    fn: Callable
+    args: Tuple[Any, ...]
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...]
+    meta: Dict[str, Any]
+
+
+def _abstract(tree_shapes):
+    return tree_shapes
+
+
+def _state_shardings(cfg, run, mesh, pshard):
+    repl = SH.replicated(mesh)
+    if run.optimizer == "adamw":
+        opt = {"m": pshard, "v": pshard, "count": repl}
+    else:  # adafactor: factored moments drop the last / second-to-last dim
+        def fct(sh):
+            spec = sh.spec
+            vr = P(*spec[:-1]) if len(spec) >= 1 else P()
+            vc = P(*spec[:-2], spec[-1]) if len(spec) >= 2 else P()
+            return {"vr": NamedSharding(mesh, vr), "vc": NamedSharding(mesh, vc)}
+
+        def leaf(sh):
+            # 1-D params keep a full second moment
+            return fct(sh)
+        opt = {"f": jax.tree_util.tree_map(
+            lambda sh: fct(sh), pshard,
+            is_leaf=lambda x: isinstance(x, NamedSharding)), "count": repl}
+    st = {"params": pshard, "opt": opt, "step": repl}
+    if run.grad_compression == "int8_ef":
+        st["ef"] = pshard
+    return st
+
+
+def _abstract_opt(cfg, run, params_abs):
+    """Abstract optimizer state matching make_optimizer(run.optimizer)."""
+    from repro.optim import make_optimizer
+    init, _ = make_optimizer(run.optimizer)
+    return jax.eval_shape(init, params_abs)
+
+
+def _fix_adafactor_1d(opt_shard, opt_abs):
+    """Adafactor keeps {'v'} (not vr/vc) for 1-D params — align the sharding
+    tree with the abstract state structure."""
+    def align(sh, ab):
+        if isinstance(ab, dict) and "v" in ab and isinstance(sh, dict):
+            return {"v": sh["vr"]}
+        return sh
+    return jax.tree_util.tree_map(
+        align, opt_shard, opt_abs,
+        is_leaf=lambda x: isinstance(x, dict) and
+        (("vr" in x) or ("v" in x)))
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh,
+               run: Optional[RunConfig] = None, *,
+               register_sharder: bool = True) -> Cell:
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        raise ValueError(f"{arch} × {shape_name}: {why}")
+    run = run or default_run_config(arch, shape_name)
+    fsdp_flag = shape.kind == "train" or serve_needs_fsdp(cfg, mesh)
+    if register_sharder:
+        set_activation_sharder(SH.make_activation_sharder(
+            mesh, seq_parallel=run.seq_parallel and shape.kind != "decode"),
+            mesh=mesh, fsdp=fsdp_flag)
+
+    B, S = shape.global_batch, shape.seq_len
+    repl = SH.replicated(mesh)
+    meta: Dict[str, Any] = {"arch": arch, "shape": shape_name,
+                            "kind": shape.kind, "params": cfg.num_params(),
+                            "mesh": dict(mesh.shape)}
+
+    if shape.kind == "train":
+        pshard = SH.param_shardings(cfg, mesh, fsdp=True)
+        params_abs = M.abstract_params(cfg)
+        opt_abs = _abstract_opt(cfg, run, params_abs)
+        state_abs = {"params": params_abs, "opt": opt_abs,
+                     "step": jax.ShapeDtypeStruct((), jnp.int32)}
+        state_sh = _state_shardings(cfg, run, mesh, pshard)
+        if run.optimizer == "adafactor":
+            state_sh["opt"]["f"] = _fix_adafactor_1d(state_sh["opt"]["f"],
+                                                     opt_abs["f"])
+        if run.grad_compression == "int8_ef":
+            state_abs["ef"] = jax.tree_util.tree_map(
+                lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params_abs)
+        batch_abs = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                     "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        batch_sh = dict(SH.batch_shardings(cfg, mesh, B),
+                        labels=SH.label_sharding(mesh, B))
+        if cfg.is_encoder_decoder:
+            batch_abs["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.encoder_seq_len, cfg.d_model), jnp.float32)
+        fn = step_mod.make_train_step(cfg, run, total_steps=10_000)
+        metrics_sh = {"loss": repl, "aux_loss": repl, "grad_norm": repl,
+                      "lr": repl, "param_norm": repl}
+        return Cell(arch, shape, fn, (state_abs, batch_abs),
+                    (state_sh, batch_sh), (state_sh, metrics_sh), (0,), meta)
+
+    # ---- serving cells: params in bf16, no optimizer state ----
+    fsdp = serve_needs_fsdp(cfg, mesh)
+    meta["serve_fsdp"] = fsdp
+    pshard = SH.param_shardings(cfg, mesh, fsdp=fsdp)
+    params_abs = jax.tree_util.tree_map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, jnp.bfloat16),
+        M.abstract_params(cfg))
+    clen = M.cache_length(cfg, S)
+    cache_abs = jax.eval_shape(lambda: M.init_cache(cfg, B, clen))
+    cache_sh = SH.cache_shardings(cfg, mesh, shape, B, clen)
+    meta["cache_len"] = clen
+
+    if shape.kind == "prefill":
+        batch_abs = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        if cfg.is_encoder_decoder:
+            batch_abs["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.encoder_seq_len, cfg.d_model), jnp.float32)
+        batch_sh = SH.batch_shardings(cfg, mesh, B)
+        fn = step_mod.make_prefill_step(cfg, run)
+        logits_sh = NamedSharding(mesh, P(None, None, "model"))
+        return Cell(arch, shape, fn, (params_abs, batch_abs, cache_abs),
+                    (pshard, batch_sh, cache_sh), (logits_sh, cache_sh),
+                    (2,), meta)
+
+    # decode
+    tok_abs = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos_abs = jax.ShapeDtypeStruct((), jnp.int32)
+    tok_sh = SH.batch_shardings(cfg, mesh, B)["tokens"]
+    fn = step_mod.make_decode_step(cfg, run, mla_absorbed=run.attn_impl == "mla_absorbed")
+    logits_sh = NamedSharding(mesh, P(None, None, "model"))
+    return Cell(arch, shape, fn, (params_abs, cache_abs, tok_abs, pos_abs),
+                (pshard, cache_sh, tok_sh, repl), (logits_sh, cache_sh),
+                (1,), meta)

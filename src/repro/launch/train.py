@@ -1,0 +1,55 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch stablelm-1.6b \
+      --smoke --steps 50
+
+``--smoke`` runs the reduced config on the local device; without it the
+launcher builds the full production cell (requires a real multi-chip runtime —
+on this container use launch/dryrun.py instead)."""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import get_config, smoke
+from repro.configs.base import RunConfig
+from repro.train.loop import train_loop
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-1.6b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--optimizer", default="adamw")
+    ap.add_argument("--grad-compression", default="none")
+    ap.add_argument("--microbatches", type=int, default=1)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke(cfg)
+    else:
+        raise SystemExit("full-scale training needs a TPU runtime; "
+                         "use --smoke here or launch/dryrun.py for the "
+                         "production mesh")
+    run = RunConfig(arch=args.arch, steps=args.steps, optimizer=args.optimizer,
+                    grad_compression=args.grad_compression,
+                    microbatches=args.microbatches,
+                    checkpoint_every=max(10, args.steps // 4))
+    ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    t0 = time.time()
+    res = train_loop(cfg, run, steps=args.steps, ckpt=ckpt)
+    dt = time.time() - t0
+    print(f"arch={args.arch} steps={res.steps_run} "
+          f"loss[0]={res.losses[0]:.4f} loss[-1]={res.losses[-1]:.4f} "
+          f"({dt:.1f}s, resumed_from={res.resumed_from})")
+    assert res.losses[-1] < res.losses[0], "loss did not decrease"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,483 @@
+"""Attention variants: GQA (+RoPE, QK-norm, sliding window) and MLA (DeepSeek-V2).
+
+Three execution regimes share one masking convention based on *positions*:
+  train/prefill : chunked flash-style attention (lax.scan over q/kv blocks) —
+                  never materializes the S×T score matrix, so prefill_32k fits.
+  decode        : direct einsum over the whole cache; the cache seq dim may be
+                  sharded over mesh axes — GSPMD turns the softmax reductions
+                  into all-reduces (this is how long_500k decodes on 512 chips).
+
+Cache slots carry their absolute position in ``cache_pos`` (−1 = empty), which
+uniformly encodes causality, sliding windows and rolling-buffer wraparound.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ParamSpec, apply_rope, rmsnorm
+from repro.models.sharding_hooks import shard_activations
+
+NEG_INF = -1e9
+
+
+# ---------------------------------------------------------------------------
+# Param specs
+# ---------------------------------------------------------------------------
+
+def gqa_specs(cfg: ModelConfig) -> dict:
+    d, h, g = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    k = cfg.resolved_head_dim
+    spec = {
+        "wq": ParamSpec((d, h, k), ("embed", "heads", "head_dim"), init="fan_in"),
+        "wk": ParamSpec((d, g, k), ("embed", "kv_heads", "head_dim"), init="fan_in"),
+        "wv": ParamSpec((d, g, k), ("embed", "kv_heads", "head_dim"), init="fan_in"),
+        "wo": ParamSpec((h, k, d), ("heads", "head_dim", "embed"), init="fan_in"),
+    }
+    if cfg.use_qk_norm:
+        spec["q_norm"] = ParamSpec((k,), (None,), init="ones")
+        spec["k_norm"] = ParamSpec((k,), (None,), init="ones")
+    return spec
+
+
+def mla_specs(cfg: ModelConfig) -> dict:
+    d, h = cfg.d_model, cfg.num_heads
+    r, dn, dr, dv = cfg.kv_lora_rank, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    return {
+        "wq": ParamSpec((d, h, dn + dr), ("embed", "heads", "head_dim"), init="fan_in"),
+        "w_dkv": ParamSpec((d, r), ("embed", None), init="fan_in"),
+        "w_kpe": ParamSpec((d, dr), ("embed", None), init="fan_in"),
+        "kv_norm": ParamSpec((r,), (None,), init="ones"),
+        "w_uk": ParamSpec((r, h, dn), (None, "heads", "head_dim"), init="fan_in"),
+        "w_uv": ParamSpec((r, h, dv), (None, "heads", "head_dim"), init="fan_in"),
+        "wo": ParamSpec((h, dv, d), ("heads", "head_dim", "embed"), init="fan_in"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Mask helpers (everything is positions)
+# ---------------------------------------------------------------------------
+
+def _mask_bias(q_pos: jax.Array, kv_pos: jax.Array, *, causal: bool,
+               window: int) -> jax.Array:
+    """Additive mask [..., Sq, Tk] from absolute positions (−1 kv slot = empty)."""
+    q = q_pos[..., :, None].astype(jnp.int32)
+    t = kv_pos[..., None, :].astype(jnp.int32)
+    ok = t >= 0
+    if causal:
+        ok &= t <= q
+    if window:
+        ok &= (q - t) < window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Chunked (flash-style) attention — train & prefill
+#
+# The forward is an online-softmax double scan (q blocks × kv blocks).  The
+# backward is a hand-written flash backward (custom_vjp): only (q, k, v, out,
+# lse) are saved and every score/probability block is *recomputed* per kv
+# block.  Without this, autodiff through the scans checkpoints one f32 score
+# block per iteration — measured 9.7 GB buffers on whisper train_4k.
+# The Pallas TPU kernel (repro/kernels/flash_attention) mirrors this exactly.
+# ---------------------------------------------------------------------------
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      q_pos: jax.Array, kv_pos: jax.Array, *,
+                      causal: bool = True, window: int = 0,
+                      q_block: int = 512, kv_block: int = 1024,
+                      scale: Optional[float] = None,
+                      triangular_skip: bool = False) -> jax.Array:
+    """Online-softmax attention in pure jnp.
+
+    q: [B, S, G, M, D]  (M = q heads per kv head),  k/v: [B, T, G, D]
+    q_pos: [B, S], kv_pos: [B, T].  Returns [B, S, G, M, D].
+
+    ``triangular_skip``: for causal self-attention, only visit kv blocks with
+    index <= q block index (dynamic trip bound) — halves attention FLOPs.
+    This is the beyond-paper §Perf knob; the baseline masks rectangularly.
+    """
+    B, S, G, M, D = q.shape
+    T = k.shape[1]
+    Dv = v.shape[-1]                                   # MLA: Dv may differ from D
+    scale = scale if scale is not None else D ** -0.5
+    q_block = min(q_block, S)
+    kv_block = min(kv_block, T)
+    S_orig = S
+    # pad ragged sequences to block multiples (padded kv slots get pos=-1 => masked)
+    if S % q_block:
+        pad = q_block - S % q_block
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad)))
+        S += pad
+    if T % kv_block:
+        pad = kv_block - T % kv_block
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)), constant_values=-1)
+        T += pad
+    out = _flash(q, k, v, q_pos, kv_pos, causal, window, q_block, kv_block,
+                 float(scale), triangular_skip)
+    return out[:, :S_orig]
+
+
+def _block_live(qp_i, kp_j, causal, window):
+    """Whether any (q, kv) pair in this block tile can be unmasked."""
+    ok = jnp.max(kp_j) >= 0
+    if causal:
+        ok &= jnp.max(qp_i) >= jnp.min(jnp.where(kp_j < 0, 2**30, kp_j))
+    if window:
+        ok &= (jnp.min(jnp.where(qp_i < 0, 2**30, qp_i))
+               - jnp.max(kp_j)) < window
+    return ok
+
+
+def _flash_fwd_scan(q, k, v, q_pos, kv_pos, causal, window, q_block, kv_block,
+                    scale, skip):
+    B, S, G, M, D = q.shape
+    T, Dv = k.shape[1], v.shape[-1]
+    nq, nk = S // q_block, T // kv_block
+    qb = q.reshape(B, nq, q_block, G, M, D).transpose(1, 0, 2, 3, 4, 5)
+    qpb = q_pos.reshape(B, nq, q_block).transpose(1, 0, 2)
+    # kv blocks ride in as scan xs: dynamic_slice on a sharded operand makes
+    # GSPMD reshard the whole tensor (measured: 0.5 GB f32 all-gathers per
+    # block); scan xs leading-dim slicing partitions cleanly.
+    kb = k.reshape(B, nk, kv_block, G, D).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nk, kv_block, G, Dv).transpose(1, 0, 2, 3, 4)
+    kpb = kv_pos.reshape(B, nk, kv_block).transpose(1, 0, 2)
+
+    def q_step(_, qx):
+        q_i, qp_i = qx
+        acc0 = shard_activations(
+            jnp.zeros((B, q_block, G, M, Dv), jnp.float32), "batch0")
+        m0 = shard_activations(
+            jnp.full((B, G, M, q_block), NEG_INF, jnp.float32), "batch0")
+        l0 = shard_activations(
+            jnp.zeros((B, G, M, q_block), jnp.float32), "batch0")
+
+        def kv_step(carry, kx):
+            acc, m, l = carry
+            k_j, v_j, kp_j = kx
+            s = jnp.einsum("bqgmd,btgd->bgmqt", q_i, k_j,
+                           preferred_element_type=jnp.float32) * scale
+            s = s + _mask_bias(qp_i, kp_j, causal=causal,
+                               window=window)[:, None, None, :, :]
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bgmqt,btgd->bqgmd", p.astype(v_j.dtype), v_j,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * alpha.transpose(0, 3, 1, 2)[..., None] + pv
+            return (acc_new, m_new, l_new), None
+
+        if skip:
+            def guarded(c, kx):
+                return jax.lax.cond(
+                    _block_live(qp_i, kx[2], causal, window),
+                    lambda: kv_step(c, kx)[0], lambda: c), None
+            (acc, m, l), _ = jax.lax.scan(guarded, (acc0, m0, l0),
+                                          (kb, vb, kpb))
+        else:
+            (acc, m, l), _ = jax.lax.scan(kv_step, (acc0, m0, l0),
+                                          (kb, vb, kpb))
+        out = acc / jnp.maximum(l, 1e-20).transpose(0, 3, 1, 2)[..., None]
+        lse = m + jnp.log(jnp.maximum(l, 1e-20))
+        return None, (out.astype(q.dtype), lse)
+
+    _, (outs, lses) = jax.lax.scan(q_step, None, (qb, qpb))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, G, M, Dv)
+    lse = lses.transpose(1, 2, 3, 0, 4).reshape(B, G, M, S)
+    return out, lse
+
+
+from functools import partial
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8, 9, 10))
+def _flash(q, k, v, q_pos, kv_pos, causal, window, q_block, kv_block, scale,
+           skip):
+    out, _ = _flash_fwd_scan(q, k, v, q_pos, kv_pos, causal, window, q_block,
+                             kv_block, scale, skip)
+    return out
+
+
+def _flash_vjp_fwd(q, k, v, q_pos, kv_pos, causal, window, q_block, kv_block,
+                   scale, skip):
+    out, lse = _flash_fwd_scan(q, k, v, q_pos, kv_pos, causal, window, q_block,
+                               kv_block, scale, skip)
+    return out, (q, k, v, q_pos, kv_pos, out, lse)
+
+
+def _flash_vjp_bwd(causal, window, q_block, kv_block, scale, skip, res, dout):
+    q, k, v, q_pos, kv_pos, out, lse = res
+    B, S, G, M, D = q.shape
+    T, Dv = k.shape[1], v.shape[-1]
+    nq, nk = S // q_block, T // kv_block
+    dout = shard_activations(dout.astype(jnp.float32), "attn_io")
+    Drow = jnp.sum(dout * out.astype(jnp.float32), axis=-1) \
+              .transpose(0, 2, 3, 1)                        # [B,G,M,S]
+
+    # all operands pre-blocked as scan xs (no dynamic_slice: see fwd comment)
+    qb = q.reshape(B, nq, q_block, G, M, D).transpose(1, 0, 2, 3, 4, 5)
+    qpb = q_pos.reshape(B, nq, q_block).transpose(1, 0, 2)
+    dob = dout.reshape(B, nq, q_block, G, M, Dv).transpose(1, 0, 2, 3, 4, 5)
+    lsb = lse.reshape(B, G, M, nq, q_block).transpose(3, 0, 1, 2, 4)
+    Drb = Drow.reshape(B, G, M, nq, q_block).transpose(3, 0, 1, 2, 4)
+    kb = k.reshape(B, nk, kv_block, G, D).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nk, kv_block, G, Dv).transpose(1, 0, 2, 3, 4)
+    kpb = kv_pos.reshape(B, nk, kv_block).transpose(1, 0, 2)
+
+    def kv_outer(_, kx):
+        k_j, v_j, kp_j = kx
+        dk0 = shard_activations(
+            jnp.zeros((B, kv_block, G, D), jnp.float32), "batch0")
+        dv0 = shard_activations(
+            jnp.zeros((B, kv_block, G, Dv), jnp.float32), "batch0")
+
+        def q_inner(carry, qx):
+            dk_j, dv_j = carry
+            q_i, qp_i, do_i, lse_i, D_i = qx
+            s = jnp.einsum("bqgmd,btgd->bgmqt", q_i, k_j,
+                           preferred_element_type=jnp.float32) * scale
+            s = s + _mask_bias(qp_i, kp_j, causal=causal,
+                               window=window)[:, None, None, :, :]
+            p = jnp.exp(s - lse_i[..., None])
+            dv_c = jnp.einsum("bgmqt,bqgmd->btgd", p, do_i,
+                              preferred_element_type=jnp.float32)
+            dp = jnp.einsum("bqgmd,btgd->bgmqt", do_i,
+                            v_j.astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+            ds = p * (dp - D_i[..., None]) * scale
+            dq_c = jnp.einsum("bgmqt,btgd->bqgmd", ds,
+                              k_j.astype(jnp.float32),
+                              preferred_element_type=jnp.float32)
+            dk_c = jnp.einsum("bgmqt,bqgmd->btgd", ds,
+                              q_i.astype(jnp.float32),
+                              preferred_element_type=jnp.float32)
+            return (dk_j + dk_c, dv_j + dv_c), dq_c
+
+        def guarded(c, qx):
+            if not skip:
+                return q_inner(c, qx)
+            hit = _block_live(qx[1], kp_j, causal, window)
+            return jax.lax.cond(
+                hit, lambda: q_inner(c, qx),
+                lambda: (c, jnp.zeros((B, q_block, G, M, D), jnp.float32)))
+
+        (dk_j, dv_j), dq_js = jax.lax.scan(
+            guarded, (dk0, dv0), (qb, qpb, dob, lsb, Drb))
+        return None, (dk_j, dv_j, dq_js)
+
+    _, (dks, dvs, dq_parts) = jax.lax.scan(kv_outer, None, (kb, vb, kpb))
+    dk = dks.transpose(1, 0, 2, 3, 4).reshape(B, T, G, D)
+    dv = dvs.transpose(1, 0, 2, 3, 4).reshape(B, T, G, Dv)
+    # dq_parts: [nk, nq, B, qb, G, M, D] -> sum over kv blocks
+    dq = dq_parts.sum(0).transpose(1, 0, 2, 3, 4, 5).reshape(B, S, G, M, D)
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+            None, None)
+
+
+_flash.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+def direct_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     q_pos: jax.Array, kv_pos: jax.Array, *,
+                     causal: bool = True, window: int = 0,
+                     scale: Optional[float] = None) -> jax.Array:
+    """Unchunked attention for decode (S small; T may be mesh-sharded)."""
+    D = q.shape[-1]
+    scale = scale if scale is not None else D ** -0.5
+    s = jnp.einsum("bqgmd,btgd->bgmqt", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = s + _mask_bias(q_pos, kv_pos, causal=causal,
+                       window=window)[:, None, None, :, :]
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgmqt,btgd->bqgmd", w.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# KV cache
+# ---------------------------------------------------------------------------
+
+def init_gqa_cache(cfg: ModelConfig, num_layers: int, batch: int, length: int,
+                   dtype=jnp.bfloat16) -> dict:
+    g, k = cfg.num_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((num_layers, batch, length, g, k), dtype),
+        "v": jnp.zeros((num_layers, batch, length, g, k), dtype),
+        "pos": jnp.full((num_layers, batch, length), -1, jnp.int32),
+    }
+
+
+def init_mla_cache(cfg: ModelConfig, num_layers: int, batch: int, length: int,
+                   dtype=jnp.bfloat16) -> dict:
+    return {
+        "c_kv": jnp.zeros((num_layers, batch, length, cfg.kv_lora_rank), dtype),
+        "k_pe": jnp.zeros((num_layers, batch, length, cfg.qk_rope_dim), dtype),
+        "pos": jnp.full((num_layers, batch, length), -1, jnp.int32),
+    }
+
+
+def _write_slot(buf: jax.Array, new: jax.Array, slot: jax.Array) -> jax.Array:
+    """Write ``new`` [B, S, ...] into ``buf`` [B, T, ...] at slot (scalar) or [B]."""
+    if slot.ndim == 0:
+        return jax.lax.dynamic_update_slice_in_dim(buf, new.astype(buf.dtype),
+                                                   slot, axis=1)
+    b = jnp.arange(buf.shape[0])
+    return buf.at[b[:, None], slot[:, None] + jnp.arange(new.shape[1])[None, :]] \
+              .set(new.astype(buf.dtype))
+
+
+def write_kv_cache(cache_layer: dict, updates: dict, positions: jax.Array,
+                   slot: jax.Array) -> dict:
+    """updates: same keys as cache minus 'pos'; positions [B, S] absolute."""
+    out = {}
+    for name, new in updates.items():
+        out[name] = _write_slot(cache_layer[name], new, slot)
+    out["pos"] = _write_slot(cache_layer["pos"], positions, slot)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Full attention blocks
+# ---------------------------------------------------------------------------
+
+def _split_heads(q, g):
+    B, S, H, D = q.shape
+    return q.reshape(B, S, g, H // g, D)
+
+
+def gqa_attention(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array,
+                  *, cache_layer: Optional[dict] = None,
+                  cache_slot: Optional[jax.Array] = None,
+                  causal: bool = True, decode: bool = False,
+                  use_rope: bool = True,
+                  triangular_skip: bool = False) -> Tuple[jax.Array, Optional[dict]]:
+    """x: [B, S, d]; positions [B, S] absolute.  Returns (out, new_cache_layer)."""
+    g = cfg.num_kv_heads
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dgk->bsgk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dgk->bsgk", x, p["wv"].astype(x.dtype))
+    if cfg.use_qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    if use_rope:
+        q = apply_rope(q, positions, theta=cfg.rope_theta, fraction=cfg.rope_fraction)
+        k = apply_rope(k, positions, theta=cfg.rope_theta, fraction=cfg.rope_fraction)
+
+    new_cache = None
+    S_in = x.shape[1]
+    if cache_layer is not None and cache_layer["k"].shape[1] < S_in:
+        # SWA prefill into a rolling window cache: attend over the full fresh
+        # K/V (window-masked), persist only the last `window` tokens.  Their
+        # slots coincide with pos % window because S % window == 0.
+        win = cache_layer["k"].shape[1]
+        assert S_in % win == 0, (S_in, win)
+        new_cache = write_kv_cache(
+            cache_layer, {"k": k[:, -win:], "v": v[:, -win:]},
+            positions[:, -win:], jnp.int32(0))
+        k_all, v_all, kv_pos = k, v, positions
+    elif cache_layer is not None:
+        new_cache = write_kv_cache(cache_layer, {"k": k, "v": v}, positions,
+                                   cache_slot)
+        k_all = new_cache["k"].astype(x.dtype)
+        v_all = new_cache["v"].astype(x.dtype)
+        kv_pos = new_cache["pos"]
+    else:
+        k_all, v_all, kv_pos = k, v, positions
+
+    qg = _split_heads(q, g)
+    if not decode:
+        # gather from sequence-parallel once per operand (measured best of
+        # three placements; EXPERIMENTS.md §Perf iteration 4)
+        qg = shard_activations(qg, "attn_io")
+        k_all = shard_activations(k_all, "attn_io")
+        v_all = shard_activations(v_all, "attn_io")
+    if decode:
+        out = direct_attention(qg, k_all, v_all, positions, kv_pos,
+                               causal=causal, window=cfg.sliding_window)
+    else:
+        out = chunked_attention(qg, k_all, v_all, positions, kv_pos,
+                                causal=causal, window=cfg.sliding_window,
+                                triangular_skip=triangular_skip)
+    B, S = x.shape[:2]
+    out = out.reshape(B, S, cfg.num_heads, cfg.resolved_head_dim)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype)), new_cache
+
+
+def mla_attention(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array,
+                  *, cache_layer: Optional[dict] = None,
+                  cache_slot: Optional[jax.Array] = None,
+                  decode: bool = False, absorbed: bool = False,
+                  triangular_skip: bool = False) -> Tuple[jax.Array, Optional[dict]]:
+    """Multi-head Latent Attention (DeepSeek-V2).  Cache holds compressed c_kv+k_pe.
+
+    ``absorbed``: decode-time weight absorption (w_uk folded into q, w_uv into o) —
+    attention runs in the rank-r latent space; the O(T·H·d) up-projection of the
+    cache disappears.  Baseline (paper-form) keeps the naive up-projection.
+    """
+    B, S, _ = x.shape
+    h, r = cfg.num_heads, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    scale = (dn + dr) ** -0.5
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    q_nope, q_pe = q[..., :dn], q[..., dn:]
+    q_pe = apply_rope(q_pe, positions, theta=cfg.rope_theta)
+
+    c_kv = rmsnorm(jnp.einsum("bsd,dr->bsr", x, p["w_dkv"].astype(x.dtype)),
+                   p["kv_norm"], cfg.norm_eps)
+    k_pe = apply_rope(jnp.einsum("bsd,dr->bsr", x, p["w_kpe"].astype(x.dtype))
+                      [:, :, None, :], positions, theta=cfg.rope_theta)[:, :, 0, :]
+
+    new_cache = None
+    if cache_layer is not None:
+        new_cache = write_kv_cache(cache_layer, {"c_kv": c_kv, "k_pe": k_pe},
+                                   positions, cache_slot)
+        c_all = new_cache["c_kv"].astype(x.dtype)
+        pe_all = new_cache["k_pe"].astype(x.dtype)
+        kv_pos = new_cache["pos"]
+    else:
+        c_all, pe_all, kv_pos = c_kv, k_pe, positions
+
+    if absorbed and decode:
+        # latent-space attention: scores = (q_nope · w_uk) · c_kv + q_pe · k_pe
+        q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, p["w_uk"].astype(x.dtype))
+        s = (jnp.einsum("bshr,btr->bhst", q_lat, c_all,
+                        preferred_element_type=jnp.float32)
+             + jnp.einsum("bshk,btk->bhst", q_pe, pe_all,
+                          preferred_element_type=jnp.float32)) * scale
+        s = s + _mask_bias(positions, kv_pos, causal=True, window=0)[:, None]
+        w = jax.nn.softmax(s, axis=-1)
+        o_lat = jnp.einsum("bhst,btr->bshr", w.astype(x.dtype), c_all,
+                           preferred_element_type=jnp.float32).astype(x.dtype)
+        out = jnp.einsum("bshr,rhk->bshk", o_lat, p["w_uv"].astype(x.dtype))
+    else:
+        k_nope = jnp.einsum("btr,rhk->bthk", c_all, p["w_uk"].astype(x.dtype))
+        v_all = jnp.einsum("btr,rhk->bthk", c_all, p["w_uv"].astype(x.dtype))
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(pe_all[:, :, None, :],
+                                      (*pe_all.shape[:2], h, dr))], axis=-1)
+        q_full = jnp.concatenate([q_nope, q_pe], axis=-1)
+        # one kv "group" of h heads  -> reuse GQA cores with G=h, M=1
+        qg = q_full[:, :, :, None, :]
+        kg, vg = k_full, v_all
+        if not decode:
+            qg = shard_activations(qg, "attn_io")
+            kg = shard_activations(kg, "attn_io")
+            vg = shard_activations(vg, "attn_io")
+        if decode:
+            out = direct_attention(qg, kg, vg, positions, kv_pos,
+                                   causal=True, scale=scale)
+        else:
+            out = chunked_attention(qg, kg, vg, positions, kv_pos,
+                                    causal=True, scale=scale,
+                                    triangular_skip=triangular_skip)
+        out = out[:, :, :, 0, :]
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype)), new_cache

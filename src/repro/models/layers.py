@@ -1,0 +1,167 @@
+"""Foundation layers + the ParamSpec system.
+
+Params are described *declaratively*: ``param_specs(cfg)`` (in model.py) returns a
+pytree of :class:`ParamSpec`.  From that single tree we derive
+  - real initialized params      (``init_from_specs`` — smoke tests / examples)
+  - abstract ShapeDtypeStructs   (``abstract_from_specs`` — dry-run, NO allocation)
+  - logical-axis tree            (``axes_from_specs`` — sharding rules)
+This is what lets the 398 B config lower on a 1-CPU host.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]      # logical axis name per dim (None = replicated)
+    init: str = "normal"                 # normal | zeros | ones | fan_in | const
+    dtype: Any = jnp.float32
+    const: float = 0.0                   # for init == "const"
+    stddev: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _init_leaf(spec: ParamSpec, key: jax.Array) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "const":
+        return jnp.full(spec.shape, spec.const, spec.dtype)
+    if spec.init == "fan_in":
+        fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+        std = 1.0 / np.sqrt(fan_in)
+        return (std * jax.random.normal(key, spec.shape)).astype(spec.dtype)
+    return (spec.stddev * jax.random.normal(key, spec.shape)).astype(spec.dtype)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_from_specs(specs, seed: int):
+    """Deterministic init: rng folded from the leaf path, independent of tree order."""
+    leaves = jax.tree_util.tree_leaves_with_path(specs, is_leaf=_is_spec)
+    root = jax.random.PRNGKey(seed)
+    out = []
+    for path, spec in leaves:
+        path_str = jax.tree_util.keystr(path)
+        key = jax.random.fold_in(root, hash(path_str) % (2**31))
+        out.append(_init_leaf(spec, key))
+    treedef = jax.tree_util.tree_structure(specs, is_leaf=_is_spec)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def abstract_from_specs(specs):
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs, is_leaf=_is_spec)
+
+
+def axes_from_specs(specs):
+    return jax.tree_util.tree_map(lambda s: s.axes, specs, is_leaf=_is_spec)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+              eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def apply_norm(cfg, p: dict, x: jax.Array) -> jax.Array:
+    if cfg.norm_type == "layernorm":
+        return layernorm(x, p["scale"], p["bias"], cfg.norm_eps)
+    return rmsnorm(x, p["scale"], cfg.norm_eps)
+
+
+def norm_spec(cfg, d: int) -> dict:
+    spec = {"scale": ParamSpec((d,), (None,), init="ones")}
+    if cfg.norm_type == "layernorm":
+        spec["bias"] = ParamSpec((d,), (None,), init="zeros")
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (half-split llama convention, partial-rotary capable)
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(rot_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, *, theta: float = 10_000.0,
+               fraction: float = 1.0) -> jax.Array:
+    """x: [..., seq, heads, head_dim]; positions: [..., seq] (int)."""
+    head_dim = x.shape[-1]
+    rot_dim = int(head_dim * fraction) // 2 * 2
+    if rot_dim == 0:
+        return x
+    freqs = rope_frequencies(rot_dim, theta)                       # [rot/2]
+    angles = positions.astype(jnp.float32)[..., None] * freqs       # [..., s, rot/2]
+    angles = angles[..., None, :]                                    # broadcast heads
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    xr, xp = x[..., :rot_dim], x[..., rot_dim:]
+    x1, x2 = jnp.split(xr.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), xp], axis=-1)
+
+
+def sinusoidal_positions(num_pos: int, d: int) -> jax.Array:
+    """Classic transformer sin/cos table [num_pos, d] (whisper enc/dec)."""
+    inv = 1.0 / (10_000.0 ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+    ang = jnp.arange(num_pos, dtype=jnp.float32)[:, None] * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def sinusoidal_at(positions: jax.Array, d: int) -> jax.Array:
+    """Sin/cos embedding evaluated at arbitrary integer positions [..., S] ->
+    [..., S, d] (length-agnostic: used for whisper decode at any offset)."""
+    inv = 1.0 / (10_000.0 ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Misc
+# ---------------------------------------------------------------------------
+
+def vocab_mask_bias(vocab_size: int, padded: int) -> jax.Array:
+    """Additive bias masking padded vocab columns out of the softmax."""
+    return jnp.where(jnp.arange(padded) < vocab_size, 0.0, -1e9).astype(jnp.float32)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, vocab_size: int,
+                  ignore_id: int = -1) -> jax.Array:
+    """Mean CE over non-ignored positions.  logits [..., Vp] f32-upcast."""
+    logits = logits.astype(jnp.float32)
+    logits = logits + vocab_mask_bias(vocab_size, logits.shape[-1])
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = lse - picked
+    mask = (labels != ignore_id).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

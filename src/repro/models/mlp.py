@@ -1,0 +1,37 @@
+"""Dense FFN blocks: SwiGLU (llama family) and biased GELU (whisper)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ParamSpec
+
+
+def mlp_specs(cfg: ModelConfig, d_ff: int) -> dict:
+    d = cfg.d_model
+    if cfg.mlp_type == "swiglu":
+        return {
+            "w_gate": ParamSpec((d, d_ff), ("embed", "mlp"), init="fan_in"),
+            "w_up": ParamSpec((d, d_ff), ("embed", "mlp"), init="fan_in"),
+            "w_down": ParamSpec((d_ff, d), ("mlp", "embed"), init="fan_in"),
+        }
+    return {
+        "w_in": ParamSpec((d, d_ff), ("embed", "mlp"), init="fan_in"),
+        "b_in": ParamSpec((d_ff,), ("mlp",), init="zeros"),
+        "w_out": ParamSpec((d_ff, d), ("mlp", "embed"), init="fan_in"),
+        "b_out": ParamSpec((d,), (None,), init="zeros"),
+    }
+
+
+def mlp(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    if cfg.mlp_type == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(x.dtype))
+        u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(x.dtype))
+        return jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u,
+                          p["w_down"].astype(x.dtype))
+    h = jnp.einsum("bsd,df->bsf", x, p["w_in"].astype(x.dtype)) \
+        + p["b_in"].astype(x.dtype)
+    h = jax.nn.gelu(h, approximate=True)
+    return jnp.einsum("bsf,fd->bsd", h, p["w_out"].astype(x.dtype)) \
+        + p["b_out"].astype(x.dtype)

@@ -1,0 +1,484 @@
+"""Unified model builder for every assigned architecture.
+
+Public API (everything takes the ``ModelConfig`` first):
+  param_specs(cfg)                    -> ParamSpec pytree (declarative)
+  init_params(cfg, seed)              -> real params       (smoke/examples)
+  abstract_params(cfg)                -> ShapeDtypeStructs  (dry-run)
+  forward_train(cfg, params, batch)   -> (logits, aux)
+  init_cache(cfg, batch, cache_len)   -> decode cache pytree
+  prefill(cfg, params, batch, cache)  -> (logits, cache)
+  decode_step(cfg, params, cache, tokens, pos) -> (logits, cache)
+
+Layer stacks are *scanned* with stacked params (small HLO ⇒ the 80-cell dry-run
+compiles on one CPU).  Jamba's heterogeneous stack scans over 8-layer
+super-blocks (1 attention + 7 mamba, MoE on odd positions).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import mlp as mlp_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (ParamSpec, abstract_from_specs, apply_norm,
+                                 axes_from_specs, init_from_specs, norm_spec,
+                                 sinusoidal_at, sinusoidal_positions)
+from repro.models.sharding_hooks import shard_activations
+
+
+# ---------------------------------------------------------------------------
+# Spec construction
+# ---------------------------------------------------------------------------
+
+def _stack_specs(tree, n: int):
+    return jax.tree_util.tree_map(
+        lambda s: ParamSpec((n, *s.shape), (None, *s.axes), init=s.init,
+                            dtype=s.dtype, const=s.const, stddev=s.stddev),
+        tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def _attn_layer_specs(cfg: ModelConfig, cross: bool = False) -> dict:
+    spec = {
+        "attn_norm": norm_spec(cfg, cfg.d_model),
+        "attn": attn.mla_specs(cfg) if cfg.use_mla else attn.gqa_specs(cfg),
+    }
+    if cross:
+        spec["cross_norm"] = norm_spec(cfg, cfg.d_model)
+        spec["cross"] = attn.gqa_specs(cfg)
+    return spec
+
+
+def _ffn_layer_specs(cfg: ModelConfig, moe: bool) -> dict:
+    if moe:
+        return {"ffn_norm": norm_spec(cfg, cfg.d_model),
+                "moe": moe_mod.moe_specs(cfg)}
+    return {"ffn_norm": norm_spec(cfg, cfg.d_model),
+            "ffn": mlp_mod.mlp_specs(cfg, cfg.d_ff)}
+
+
+def _uniform_layer_specs(cfg: ModelConfig) -> dict:
+    """One decoder layer of a homogeneous stack."""
+    if cfg.family == "ssm":
+        return {"mixer_norm": norm_spec(cfg, cfg.d_model),
+                "ssm": ssm_mod.ssm_specs(cfg)}
+    spec = _attn_layer_specs(cfg)
+    spec.update(_ffn_layer_specs(cfg, moe=cfg.is_moe_layer(0)))
+    return spec
+
+
+def _jamba_block_specs(cfg: ModelConfig) -> dict:
+    """8-layer super-block: attn@0, mamba@1..7; dense FFN even, MoE odd."""
+    P = cfg.attn_layer_period
+    n_mamba = P - 1
+    n_moe = P // 2
+    n_dense = P - n_moe
+    return {
+        "attn": _attn_layer_specs(cfg),
+        "mamba": _stack_specs({"mixer_norm": norm_spec(cfg, cfg.d_model),
+                               "ssm": ssm_mod.ssm_specs(cfg)}, n_mamba),
+        "dense": _stack_specs(_ffn_layer_specs(cfg, moe=False), n_dense),
+        "moe": _stack_specs(_ffn_layer_specs(cfg, moe=True), n_moe),
+    }
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    d, Vp = cfg.d_model, cfg.padded_vocab
+    specs: Dict[str, Any] = {
+        # 'embed_table' (never FSDP-sharded): gather/scatter on a d-sharded
+        # table makes GSPMD fall back to full rematerialization (measured in
+        # the dry-run; see EXPERIMENTS.md §Perf).  vocab stays on 'model'.
+        "embed": ParamSpec((Vp, d), ("vocab", "embed_table"), stddev=0.02),
+        "final_norm": norm_spec(cfg, d),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = ParamSpec((d, Vp), ("embed", "vocab"), init="fan_in")
+
+    if cfg.is_encoder_decoder:
+        enc_layer = {
+            "attn_norm": norm_spec(cfg, d),
+            "attn": attn.gqa_specs(cfg),
+            "ffn_norm": norm_spec(cfg, d),
+            "ffn": mlp_mod.mlp_specs(cfg, cfg.d_ff),
+        }
+        specs["encoder"] = {
+            "layers": _stack_specs(enc_layer, cfg.num_encoder_layers),
+            "final_norm": norm_spec(cfg, d),
+        }
+        dec_layer = _attn_layer_specs(cfg, cross=True)
+        dec_layer.update(_ffn_layer_specs(cfg, moe=False))
+        specs["layers"] = _stack_specs(dec_layer, cfg.num_layers)
+    elif cfg.family == "hybrid":
+        assert cfg.num_layers % cfg.attn_layer_period == 0
+        nb = cfg.num_layers // cfg.attn_layer_period
+        specs["layers"] = _stack_specs(_jamba_block_specs(cfg), nb)
+    else:
+        specs["layers"] = _stack_specs(_uniform_layer_specs(cfg), cfg.num_layers)
+    return specs
+
+
+def init_params(cfg: ModelConfig, seed: int = 0):
+    return init_from_specs(param_specs(cfg), seed)
+
+
+def abstract_params(cfg: ModelConfig):
+    return abstract_from_specs(param_specs(cfg))
+
+
+def logical_axes(cfg: ModelConfig):
+    return axes_from_specs(param_specs(cfg))
+
+
+# ---------------------------------------------------------------------------
+# Layer application
+# ---------------------------------------------------------------------------
+
+def _apply_attn(cfg, p, x, positions, *, cache_layer=None, cache_slot=None,
+                decode=False, triangular_skip=False, mla_absorbed=False):
+    h = shard_activations(apply_norm(cfg, p["attn_norm"], x), "resid")
+    if cfg.use_mla:
+        out, new_cache = attn.mla_attention(
+            cfg, p["attn"], h, positions, cache_layer=cache_layer,
+            cache_slot=cache_slot, decode=decode, absorbed=mla_absorbed,
+            triangular_skip=triangular_skip)
+    else:
+        out, new_cache = attn.gqa_attention(
+            cfg, p["attn"], h, positions, cache_layer=cache_layer,
+            cache_slot=cache_slot, decode=decode,
+            use_rope=not cfg.is_encoder_decoder,  # whisper: sin/cos, no rope
+            triangular_skip=triangular_skip)
+    return x + out, new_cache
+
+
+def _apply_ffn(cfg, p, x):
+    """Returns (x, aux)."""
+    h = shard_activations(apply_norm(cfg, p["ffn_norm"], x), "resid")
+    if "moe" in p:
+        out, aux = moe_mod.moe_ffn(cfg, p["moe"], h)
+        return x + out, aux
+    return x + mlp_mod.mlp(cfg, p["ffn"], h), jnp.float32(0.0)
+
+
+def _apply_ssm(cfg, p, x, *, cache_layer=None, decode=False):
+    h = shard_activations(apply_norm(cfg, p["mixer_norm"], x), "resid")
+    out, new_cache = ssm_mod.ssm_block(cfg, p["ssm"], h, cache_layer=cache_layer,
+                                       decode=decode)
+    return x + out, new_cache
+
+
+def _uniform_layer(cfg, p, x, positions, *, cache_layer=None, cache_slot=None,
+                   decode=False, triangular_skip=False, mla_absorbed=False):
+    """Returns (x, new_cache_layer, aux)."""
+    if cfg.family == "ssm":
+        x, new_cache = _apply_ssm(cfg, p, x, cache_layer=cache_layer,
+                                  decode=decode)
+        return x, new_cache, jnp.float32(0.0)
+    x, new_cache = _apply_attn(cfg, p, x, positions, cache_layer=cache_layer,
+                               cache_slot=cache_slot, decode=decode,
+                               triangular_skip=triangular_skip,
+                               mla_absorbed=mla_absorbed)
+    x, aux = _apply_ffn(cfg, p, x)
+    return x, new_cache, aux
+
+
+def _jamba_block(cfg, p, x, positions, *, cache_block=None, cache_slot=None,
+                 decode=False, triangular_skip=False, remat_positions=False):
+    """One 8-layer super-block.  cache_block: {'attn': layer_cache,
+    'ssm': stacked[7]} or None.  Returns (x, new_cache_block, aux).
+
+    ``remat_positions``: checkpoint each of the 8 positions individually so the
+    super-block backward materializes one sub-layer at a time (whole-block
+    remat held 8 layers of transients live — measured ~70 GB on the 398B cell).
+    """
+    P = cfg.attn_layer_period
+    aux_total = jnp.float32(0.0)
+    new_cache = {"attn": None, "ssm": [] if cache_block is not None else None}
+    di, dd, dm = 0, 0, 0  # mamba / dense / moe indices
+
+    def ckpt(fn, *args):
+        if remat_positions and cache_block is None:
+            return jax.checkpoint(fn, prevent_cse=False)(*args)
+        return fn(*args)
+
+    for pos in range(P):
+        if pos == 0:
+            def attn_pos(x, pp):
+                return _apply_attn(cfg, pp, x, positions,
+                                   cache_layer=None if cache_block is None
+                                   else cache_block["attn"],
+                                   cache_slot=cache_slot, decode=decode,
+                                   triangular_skip=triangular_skip)
+            x, c = ckpt(attn_pos, x, {"attn_norm": p["attn"]["attn_norm"],
+                                      "attn": p["attn"]["attn"]})
+            new_cache["attn"] = c
+        else:
+            pm = jax.tree_util.tree_map(lambda a: a[di], p["mamba"])
+            cm = None if cache_block is None else \
+                jax.tree_util.tree_map(lambda a: a[di], cache_block["ssm"])
+            x, c = ckpt(lambda x, pp: _apply_ssm(cfg, pp, x, cache_layer=cm,
+                                                 decode=decode), x, pm)
+            if cache_block is not None:
+                new_cache["ssm"].append(c)
+            di += 1
+        if pos % 2 == 0:
+            pf = jax.tree_util.tree_map(lambda a: a[dd], p["dense"])
+            dd += 1
+        else:
+            pf = jax.tree_util.tree_map(lambda a: a[dm], p["moe"])
+            dm += 1
+        x, aux = ckpt(lambda x, pp: _apply_ffn(cfg, pp, x), x, pf)
+        aux_total = aux_total + aux
+        x = shard_activations(x, "resid")
+    if cache_block is not None:
+        new_cache["ssm"] = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *new_cache["ssm"])
+    else:
+        new_cache = None
+    return x, new_cache, aux_total
+
+
+# ---------------------------------------------------------------------------
+# Stack runners (scan over stacked params / cache)
+# ---------------------------------------------------------------------------
+
+def _run_stack(cfg, layers_p, x, positions, *, cache=None, cache_slot=None,
+               decode=False, remat_policy="none", triangular_skip=False,
+               mla_absorbed=False, encoder_out=None):
+    """Scan the decoder stack.  cache: stacked pytree or None."""
+    is_hybrid = cfg.family == "hybrid"
+
+    def body(carry, xs):
+        h, aux = carry
+        if cache is None:
+            p, c = xs, None
+        else:
+            p, c = xs
+        if is_hybrid:
+            h, new_c, a = _jamba_block(cfg, p, h, positions, cache_block=c,
+                                       cache_slot=cache_slot, decode=decode,
+                                       triangular_skip=triangular_skip,
+                                       remat_positions=remat_policy != "none")
+        elif cfg.is_encoder_decoder:
+            h, new_c, a = _encdec_layer(cfg, p, h, positions, cache_layer=c,
+                                        cache_slot=cache_slot, decode=decode,
+                                        encoder_out=encoder_out)
+        else:
+            h, new_c, a = _uniform_layer(cfg, p, h, positions, cache_layer=c,
+                                         cache_slot=cache_slot, decode=decode,
+                                         triangular_skip=triangular_skip,
+                                         mla_absorbed=mla_absorbed)
+        h = shard_activations(h, "resid")
+        return (h, aux + a), new_c
+
+    if remat_policy != "none" and not is_hybrid:
+        # hybrid stacks checkpoint per position inside the super-block instead
+        policy = (jax.checkpoint_policies.nothing_saveable
+                  if remat_policy == "full"
+                  else jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        body = jax.checkpoint(body, policy=policy, prevent_cse=False)
+
+    xs = layers_p if cache is None else (layers_p, cache)
+    (x, aux), new_cache = jax.lax.scan(body, (x, jnp.float32(0.0)), xs)
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Whisper encoder-decoder pieces
+# ---------------------------------------------------------------------------
+
+def _encdec_layer(cfg, p, x, positions, *, cache_layer=None, cache_slot=None,
+                  decode=False, encoder_out=None):
+    """Decoder layer: causal self-attn (+cache) -> cross-attn -> FFN.
+
+    Cross K/V: computed from encoder_out at train/prefill; read from the cache
+    at decode (cache_layer['ck'], ['cv'] written during prefill).
+    """
+    self_cache = None if cache_layer is None else \
+        {k: cache_layer[k] for k in ("k", "v", "pos")}
+    x, new_self = _apply_attn(cfg, {"attn_norm": p["attn_norm"],
+                                    "attn": p["attn"]},
+                              x, positions, cache_layer=self_cache,
+                              cache_slot=cache_slot, decode=decode)
+    # cross attention (never causal, no rope)
+    h = apply_norm(cfg, p["cross_norm"], x)
+    cp = p["cross"]
+    q = jnp.einsum("bsd,dhk->bshk", h, cp["wq"].astype(h.dtype))
+    if encoder_out is not None:
+        ck = jnp.einsum("bsd,dgk->bsgk", encoder_out, cp["wk"].astype(h.dtype))
+        cv = jnp.einsum("bsd,dgk->bsgk", encoder_out, cp["wv"].astype(h.dtype))
+    else:
+        ck = cache_layer["ck"].astype(h.dtype)
+        cv = cache_layer["cv"].astype(h.dtype)
+    Tenc = ck.shape[1]
+    enc_pos = jnp.broadcast_to(jnp.arange(Tenc, dtype=jnp.int32)[None, :],
+                               (ck.shape[0], Tenc))
+    qg = q[:, :, :, None, :].reshape(q.shape[0], q.shape[1],
+                                     cfg.num_kv_heads,
+                                     cfg.num_heads // cfg.num_kv_heads, -1)
+    q_pos = positions if positions.ndim == 2 else positions[None, :]
+    if decode:
+        out = attn.direct_attention(qg, ck, cv, q_pos, enc_pos, causal=False)
+    else:  # train/prefill: S is large — never materialize [S, T_enc] scores
+        out = attn.chunked_attention(qg, ck, cv, q_pos, enc_pos, causal=False)
+    out = out.reshape(*x.shape[:2], cfg.num_heads, cfg.resolved_head_dim)
+    x = x + jnp.einsum("bshk,hkd->bsd", out, cp["wo"].astype(h.dtype))
+    x, aux = _apply_ffn(cfg, p, x)
+    new_cache = None
+    if cache_layer is not None:
+        new_cache = dict(new_self or {})
+        new_cache["ck"] = ck.astype(cache_layer["ck"].dtype)
+        new_cache["cv"] = cv.astype(cache_layer["cv"].dtype)
+    return x, new_cache, aux
+
+
+def _whisper_encode(cfg, params, frames):
+    """frames: [B, T_enc, d] precomputed embeddings (audio frontend STUB)."""
+    x = frames + sinusoidal_positions(frames.shape[1],
+                                      cfg.d_model)[None].astype(frames.dtype)
+    pos = jnp.broadcast_to(jnp.arange(frames.shape[1], dtype=jnp.int32)[None],
+                           frames.shape[:2])
+
+    def body(h, p):
+        a = apply_norm(cfg, p["attn_norm"], h)
+        out, _ = attn.gqa_attention(cfg, p["attn"], a, pos, causal=False,
+                                    use_rope=False)
+        h = h + out
+        f = apply_norm(cfg, p["ffn_norm"], h)
+        h = h + mlp_mod.mlp(cfg, p["ffn"], f)
+        return h, None
+
+    # remat the encoder scan too — without it autodiff checkpoints every
+    # per-layer attention residual across the whole encoder stack
+    body = jax.checkpoint(
+        body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+        prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["encoder"]["layers"])
+    return apply_norm(cfg, params["encoder"]["final_norm"], x)
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+def _embed_tokens(cfg, params, tokens, positions, compute_dtype):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(compute_dtype)
+    if cfg.is_encoder_decoder:
+        # whisper: absolute sin/cos on the decoder side (length-agnostic —
+        # deviation from the learned 448-entry table, noted in DESIGN.md)
+        x = x + sinusoidal_at(positions, cfg.d_model).astype(compute_dtype)
+    return x
+
+
+def _logits(cfg, params, x):
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
+    return shard_activations(logits, "logits")
+
+
+def forward_train(cfg: ModelConfig, params, batch: dict, *,
+                  compute_dtype=jnp.bfloat16, remat_policy="minimal",
+                  triangular_skip=False) -> Tuple[jax.Array, jax.Array]:
+    """batch: {'tokens': [B,S]} (+ 'frames' [B,T_enc,d] for enc-dec).
+    Returns (logits [B,S,Vp], aux_loss scalar)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x = _embed_tokens(cfg, params, tokens, positions, compute_dtype)
+    x = shard_activations(x, "resid")
+    encoder_out = None
+    if cfg.is_encoder_decoder:
+        encoder_out = _whisper_encode(cfg, params,
+                                      batch["frames"].astype(compute_dtype))
+    x, _, aux = _run_stack(cfg, params["layers"], x, positions,
+                           remat_policy=remat_policy,
+                           triangular_skip=triangular_skip,
+                           encoder_out=encoder_out)
+    x = apply_norm(cfg, params["final_norm"], x)
+    return _logits(cfg, params, x), aux
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
+               dtype=jnp.bfloat16) -> dict:
+    """Decode cache skeleton (also built abstractly via jax.eval_shape)."""
+    L = cfg.num_layers
+    if cfg.family == "hybrid":
+        nb = L // cfg.attn_layer_period
+        nm = cfg.attn_layer_period - 1
+        h, ph, n = cfg.ssm_num_heads, cfg.ssm_head_dim, cfg.ssm_state_dim
+        conv_dim = cfg.d_inner + 2 * cfg.ssm_num_groups * n
+        return {
+            "attn": attn.init_gqa_cache(cfg, nb, batch, cache_len, dtype),
+            "ssm": {
+                "ssm": jnp.zeros((nb, nm, batch, h, ph, n), jnp.float32),
+                "conv": jnp.zeros((nb, nm, batch, cfg.ssm_conv_width - 1,
+                                   conv_dim), jnp.bfloat16),
+            },
+        }
+    if cfg.family == "ssm":
+        return ssm_mod.init_ssm_cache(cfg, L, batch)
+    if cfg.is_encoder_decoder:
+        c = attn.init_gqa_cache(cfg, L, batch, cache_len, dtype)
+        g, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        c["ck"] = jnp.zeros((L, batch, cfg.encoder_seq_len, g, hd), dtype)
+        c["cv"] = jnp.zeros((L, batch, cfg.encoder_seq_len, g, hd), dtype)
+        return c
+    if cfg.use_mla:
+        return attn.init_mla_cache(cfg, L, batch, cache_len, dtype)
+    return attn.init_gqa_cache(cfg, L, batch, cache_len, dtype)
+
+
+def cache_length(cfg: ModelConfig, seq_len: int) -> int:
+    """SWA archs roll a window buffer when the context exceeds the window."""
+    if cfg.sliding_window and seq_len > cfg.sliding_window:
+        return cfg.sliding_window
+    return seq_len
+
+
+def prefill(cfg: ModelConfig, params, batch: dict, cache: dict, *,
+            compute_dtype=jnp.bfloat16,
+            triangular_skip: bool = False) -> Tuple[jax.Array, dict]:
+    """Run the full prompt, writing the cache.  Returns (logits, cache)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    slot = jnp.int32(0)
+    x = _embed_tokens(cfg, params, tokens, positions, compute_dtype)
+    encoder_out = None
+    if cfg.is_encoder_decoder:
+        encoder_out = _whisper_encode(cfg, params,
+                                      batch["frames"].astype(compute_dtype))
+    x, new_cache, _ = _run_stack(cfg, params["layers"], x, positions,
+                                 cache=cache, cache_slot=slot,
+                                 triangular_skip=triangular_skip,
+                                 encoder_out=encoder_out)
+    x = apply_norm(cfg, params["final_norm"], x)
+    return _logits(cfg, params, x[:, -1:]), new_cache
+
+
+def decode_step(cfg: ModelConfig, params, cache: dict, tokens: jax.Array,
+                pos: jax.Array, *, compute_dtype=jnp.bfloat16,
+                mla_absorbed=False) -> Tuple[jax.Array, dict]:
+    """One token per sequence.  tokens [B,1]; pos scalar or [B] absolute index.
+    Returns (logits [B,1,Vp], new cache)."""
+    B = tokens.shape[0]
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = jnp.broadcast_to(pos.reshape(-1, 1) if pos.ndim else pos[None, None],
+                                 (B, 1)).astype(jnp.int32)
+    if cfg.family in ("ssm",):
+        slot = None
+    else:
+        clen = None
+        tree = cache["attn"] if cfg.family == "hybrid" else cache
+        clen = tree["pos"].shape[-1]
+        slot = pos % clen                      # rolling writes for SWA windows
+    x = _embed_tokens(cfg, params, tokens, positions, compute_dtype)
+    x, new_cache, _ = _run_stack(cfg, params["layers"], x, positions,
+                                 cache=cache, cache_slot=slot, decode=True,
+                                 mla_absorbed=mla_absorbed)
+    x = apply_norm(cfg, params["final_norm"], x)
+    return _logits(cfg, params, x), new_cache

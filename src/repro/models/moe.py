@@ -1,0 +1,236 @@
+"""Mixture-of-Experts with banked capacity dispatch.
+
+Distribution (DESIGN.md §5): **expert parallelism over the 'model' mesh axis**,
+written as an explicit ``shard_map`` — measured GSPMD fallbacks (replicated
+dispatch buffers, u32 scatter expansions on the expert-sharded dim) made the
+auto-partitioned formulation unusable at the 398B scale (EXPERIMENTS.md §Perf).
+
+Per model shard: all-gather the (sequence-parallel) tokens → route over the
+FULL expert set (replicated router ⇒ identical decisions on every shard) →
+scatter only the shard's local experts into a *local* capacity buffer → expert
+FFN → gather-back → ``psum_scatter`` over 'model' sums expert contributions and
+returns the result to sequence-parallel layout.  One all-gather + one
+reduce-scatter per MoE layer — identical comm volume to a Megatron FFN.
+
+Paper tie-in: the capacity buffer is a *shared memory with many masters* (token
+groups).  Slot assignment applies ``core.address.fractal_permute`` so capacity
+overflow drops are whitened across the sequence instead of truncating the tail
+— the paper's §II-C fractal randomization as a load-balancing policy.
+``whiten=False`` recovers vanilla GShard tail-drop (ablated in benchmarks).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core.address import fractal_permute
+from repro.models.layers import ParamSpec
+from repro.models.sharding_hooks import current_mesh, params_fsdp
+
+
+def moe_specs(cfg: ModelConfig) -> dict:
+    d, e = cfg.d_model, cfg.moe_num_experts
+    f = cfg.moe_d_ff or cfg.d_ff
+    spec = {
+        "router": ParamSpec((d, e), ("embed", None), init="fan_in"),
+        "w_gate": ParamSpec((e, d, f), ("expert", "embed", "expert_mlp"), init="fan_in"),
+        "w_up": ParamSpec((e, d, f), ("expert", "embed", "expert_mlp"), init="fan_in"),
+        "w_down": ParamSpec((e, f, d), ("expert", "expert_mlp", "embed"), init="fan_in"),
+    }
+    if cfg.moe_num_shared:
+        fs = cfg.moe_num_shared * f
+        spec.update({
+            "ws_gate": ParamSpec((d, fs), ("embed", "mlp"), init="fan_in"),
+            "ws_up": ParamSpec((d, fs), ("embed", "mlp"), init="fan_in"),
+            "ws_down": ParamSpec((fs, d), ("mlp", "embed"), init="fan_in"),
+        })
+    return spec
+
+
+def expert_capacity(cfg: ModelConfig, tokens_per_group: int) -> int:
+    c = math.ceil(cfg.moe_capacity_factor * cfg.moe_top_k * tokens_per_group
+                  / cfg.moe_num_experts)
+    return max(8, -(-c // 8) * 8)  # round up to 8 for tiling
+
+
+def _route(cfg: ModelConfig, x, router, *, whiten: bool):
+    """Routing + capacity slot assignment over the FULL expert set.
+    x: [B, S, d].  Returns (top_w, top_e, slot [B,S,K], aux)."""
+    B, S, _ = x.shape
+    E, K = cfg.moe_num_experts, cfg.moe_top_k
+    C = expert_capacity(cfg, S)
+    logits = jnp.einsum("gsd,de->gse", x, router.astype(x.dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, K)
+    top_w = top_w / jnp.maximum(jnp.sum(top_w, -1, keepdims=True), 1e-9)
+
+    f_e = jnp.mean(jax.nn.one_hot(top_e, E, dtype=jnp.float32), axis=(1, 2))
+    p_e = jnp.mean(probs, axis=1)
+    aux = E * jnp.mean(jnp.sum(f_e * p_e, axis=-1))
+
+    NK = S * K
+    e_flat = top_e.reshape(B, NK)
+    if whiten:
+        perm = jnp.asarray(fractal_permute(NK, seed=1))
+        e_perm = e_flat[:, perm]
+    else:
+        perm = jnp.arange(NK)
+        e_perm = e_flat
+    order = jnp.argsort(e_perm, axis=-1, stable=True)
+    e_sorted = jnp.take_along_axis(e_perm, order, axis=-1)
+    start = jax.vmap(lambda es: jnp.searchsorted(es, jnp.arange(E)))(e_sorted)
+    rank_sorted = jnp.arange(NK)[None, :] - jnp.take_along_axis(
+        start, e_sorted, axis=-1)
+    rank_perm = jnp.zeros_like(rank_sorted).at[
+        jnp.arange(B)[:, None], order].set(rank_sorted)
+    slot = jnp.zeros_like(rank_perm).at[
+        jnp.arange(B)[:, None], perm].set(rank_perm).reshape(B, S, K)
+    slot = jnp.where(slot < C, slot, C)                 # C == dropped
+    return top_w, top_e, slot, aux
+
+
+def _dispatch_compute_combine(cfg: ModelConfig, x, w_gate, w_up, w_down,
+                              top_w, top_e, slot, *, lo: int,
+                              x_proj=None, psum_axis=None):
+    """Experts [lo, lo+E_loc) only.  x: [B, S, d] full tokens; weights local.
+    x_proj/psum_axis: partial-sum mode — weights keep their FSDP d-slice,
+    the capacity activations are psum'd instead (see moe_shard).
+    Returns this shard's additive output contribution [B, S, d]."""
+    B, S, d = x.shape
+    E_loc = w_gate.shape[0]
+    K = cfg.moe_top_k
+    C = expert_capacity(cfg, S)
+    cd = x.dtype
+    xin = x if x_proj is None else x_proj
+    din = xin.shape[-1]
+
+    e_loc = top_e - lo                                   # [B,S,K]
+    oob = (e_loc < 0) | (e_loc >= E_loc) | (slot >= C)
+    e_idx = jnp.where(oob, E_loc, e_loc)                 # OOB -> dropped
+
+    scatter_g = jax.vmap(lambda e_g, s_g, x_g: jnp.zeros(
+        (E_loc, C, din), cd).at[e_g, s_g].set(x_g, mode="drop"))
+    buf = jnp.zeros((B, E_loc, C, din), cd)
+    for kk in range(K):  # loop-over-k: never materialize K×-repeated tokens
+        buf = buf + scatter_g(e_idx[:, :, kk], slot[:, :, kk], xin)
+
+    g = jnp.einsum("gecd,edf->gecf", buf, w_gate.astype(cd))
+    u = jnp.einsum("gecd,edf->gecf", buf, w_up.astype(cd))
+    if psum_axis is not None:   # partial products over the d-slice
+        g = jax.lax.psum(g, psum_axis)
+        u = jax.lax.psum(u, psum_axis)
+    h = jax.nn.silu(g) * u
+    buf_out = jnp.einsum("gecf,efd->gecd", h, w_down.astype(cd))
+    if psum_axis is not None:   # w_down's d output is sliced: re-assemble
+        buf_out = jax.lax.all_gather(buf_out, psum_axis, axis=3, tiled=True)
+
+    gather_g = jax.vmap(lambda b_g, e_g, s_g: b_g.at[e_g, s_g].get(
+        mode="fill", fill_value=0))
+    out = jnp.zeros_like(x)
+    for kk in range(K):
+        out = out + gather_g(buf_out, e_idx[:, :, kk], slot[:, :, kk]) \
+            * top_w[:, :, kk, None].astype(cd)
+    return out
+
+
+def _shared_expert(cfg, p, x):
+    cd = x.dtype
+    sg = jnp.einsum("bsd,df->bsf", x, p["ws_gate"].astype(cd))
+    su = jnp.einsum("bsd,df->bsf", x, p["ws_up"].astype(cd))
+    return jnp.einsum("bsf,fd->bsd", jax.nn.silu(sg) * su,
+                      p["ws_down"].astype(cd))
+
+
+def moe_ffn(cfg: ModelConfig, p: dict, x: jax.Array, *,
+            whiten: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """x: [B, S, d] -> (out, aux).  Groups = batch rows.
+
+    With a registered mesh whose 'model' axis divides E: explicit shard_map EP
+    (see module docstring).  Otherwise (CPU tests): single-shard fallback with
+    identical semantics.
+    """
+    mesh = current_mesh()
+    E = cfg.moe_num_experts
+    B, S, d = x.shape
+
+    if (mesh is None or "model" not in mesh.axis_names
+            or E % mesh.shape["model"] != 0):
+        top_w, top_e, slot, aux = _route(cfg, x, p["router"], whiten=whiten)
+        out = _dispatch_compute_combine(cfg, x, p["w_gate"], p["w_up"],
+                                        p["w_down"], top_w, top_e, slot, lo=0)
+        if cfg.moe_num_shared:
+            out = out + _shared_expert(cfg, p, x)
+        return out, aux.astype(jnp.float32)
+
+    tp = mesh.shape["model"]
+    E_loc = E // tp
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    dp_size = math.prod(mesh.shape[a] for a in dp)
+    bspec = dp if B % dp_size == 0 else None
+    sp = "model" if (S % tp == 0 and S > 1) else None
+    mlp_ax = "data" if (params_fsdp()
+                        and p["w_gate"].shape[1] % mesh.shape["data"] == 0) \
+        else None
+    # in_specs mirror the launcher's param sharding (expert→model, embed→data
+    # under FSDP) so shard_map adds no resharding.
+    w_spec = P("model", mlp_ax, None)
+    wd_spec = P("model", None, mlp_ax)
+
+    @partial(jax.shard_map, mesh=mesh,
+             in_specs=(P(bspec, sp, None), P(None, None), w_spec, w_spec,
+                       wd_spec),
+             out_specs=(P(bspec, sp, None), P()),
+             check_vma=False)  # transpose of replicated-in params trips the
+                               # static replication checker; semantics verified
+                               # in tests/test_moe.py against the local path
+    def moe_shard(x_l, router, wg_l, wu_l, wd_l):
+        if sp is not None:
+            x_full = jax.lax.all_gather(x_l, "model", axis=1, tiled=True)
+        else:
+            x_full = x_l
+        top_w, top_e, slot, aux = _route(cfg, x_full, router, whiten=whiten)
+        lo = jax.lax.axis_index("model") * E_loc
+        # FSDP'd expert weights (d sharded over 'data') are NOT gathered when
+        # the tokens are replicated over 'data' (batch-1 long-context decode):
+        # each data shard computes a partial expert product on its d-slice and
+        # one psum over 'data' of the (much smaller) capacity activations
+        # combines them — beyond-paper §Perf: replaces a 19 GB/layer weight
+        # gather on the 398B config with a ~2 MB activation reduce.
+        # (With batch sharded over 'data' the psum would mix different rows —
+        # guard: partial mode only when bspec is None.)
+        if mlp_ax is not None and bspec is None:
+            dsh = mesh.shape[mlp_ax]
+            di = jax.lax.axis_index(mlp_ax)
+            d_loc = wg_l.shape[1]
+            x_slice = jax.lax.dynamic_slice_in_dim(
+                x_full, di * d_loc, d_loc, axis=2)
+            out_full = _dispatch_compute_combine(
+                cfg, x_full, wg_l, wu_l, wd_l, top_w, top_e, slot, lo=lo,
+                x_proj=x_slice, psum_axis=mlp_ax)
+        else:
+            if mlp_ax is not None:  # FSDP (ZeRO-3) gather of the d_model dim
+                wg_l = jax.lax.all_gather(wg_l, mlp_ax, axis=1, tiled=True)
+                wu_l = jax.lax.all_gather(wu_l, mlp_ax, axis=1, tiled=True)
+                wd_l = jax.lax.all_gather(wd_l, mlp_ax, axis=2, tiled=True)
+            out_full = _dispatch_compute_combine(cfg, x_full, wg_l, wu_l,
+                                                 wd_l, top_w, top_e, slot,
+                                                 lo=lo)
+        if sp is not None:
+            out_l = jax.lax.psum_scatter(out_full, "model", scatter_dimension=1,
+                                         tiled=True)
+        else:
+            out_l = jax.lax.psum(out_full, "model")
+        aux = jax.lax.pmean(aux, tuple(mesh.axis_names))
+        return out_l, aux
+
+    out, aux = moe_shard(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+    if cfg.moe_num_shared:
+        out = out + _shared_expert(cfg, p, x)
+    return out, aux.astype(jnp.float32)

@@ -1,0 +1,38 @@
+"""Activation-sharding hook: the distribution layer registers a callback that
+applies ``jax.lax.with_sharding_constraint`` at well-known points inside the
+model; on bare CPU (tests) it is the identity, keeping model code mesh-free."""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+
+_SHARDER: Optional[Callable] = None
+_MESH: Optional[jax.sharding.Mesh] = None
+_FSDP: bool = False
+
+
+def set_activation_sharder(fn: Optional[Callable],
+                           mesh: Optional[jax.sharding.Mesh] = None,
+                           fsdp: bool = False) -> None:
+    global _SHARDER, _MESH, _FSDP
+    _SHARDER = fn
+    _MESH = mesh
+    _FSDP = fsdp
+
+
+def current_mesh() -> Optional[jax.sharding.Mesh]:
+    """Mesh registered by the launcher; None in mesh-free CPU tests."""
+    return _MESH
+
+
+def params_fsdp() -> bool:
+    """Whether weights are ZeRO-3 sharded over 'data' (launcher-registered)."""
+    return _FSDP
+
+
+def shard_activations(x: jax.Array, kind: str) -> jax.Array:
+    """kind ∈ {'resid', 'logits', 'cache'} — see distributed/sharding.py."""
+    if _SHARDER is None:
+        return x
+    return _SHARDER(x, kind)

@@ -1,0 +1,5 @@
+from repro.optim.optimizers import (  # noqa: F401
+    OptimizerSpec, make_optimizer, global_norm, clip_by_global_norm,
+    lr_schedule,
+)
+from repro.optim.compression import int8_ef_compress  # noqa: F401

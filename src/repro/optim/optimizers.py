@@ -1,0 +1,149 @@
+"""Hand-rolled optimizers (no optax): AdamW and Adafactor, as pure pytree fns.
+
+``make_optimizer(name)`` returns (init_fn, update_fn):
+  init_fn(params)                          -> opt_state pytree
+  update_fn(grads, opt_state, params, lr)  -> (updates, new_opt_state)
+Updates are *subtracted* by the caller.  All state is f32 and inherits the
+parameter sharding (same tree structure ⇒ same NamedSharding resolution).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptimizerSpec:
+    name: str = "adamw"
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    # adafactor
+    decay_rate: float = 0.8
+    clip_threshold: float = 1.0
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    g = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-9))
+    return jax.tree_util.tree_map(lambda x: x * scale.astype(x.dtype), tree), g
+
+
+def lr_schedule(step: jax.Array, *, base_lr: float, warmup_steps: int,
+                total_steps: int, min_ratio: float = 0.1) -> jax.Array:
+    """Linear warmup → cosine decay to min_ratio·base_lr."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - warmup_steps) /
+                    jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return base_lr * warm * cos
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def _adamw_init(params):
+    z = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree_util.tree_map(z, params),
+            "v": jax.tree_util.tree_map(z, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def _adamw_update(grads, state, params, lr, spec: OptimizerSpec):
+    c = state["count"] + 1
+    b1, b2 = spec.b1, spec.b2
+    bc1 = 1 - b1 ** c.astype(jnp.float32)
+    bc2 = 1 - b2 ** c.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * g
+        v_new = b2 * v + (1 - b2) * jnp.square(g)
+        mh, vh = m_new / bc1, v_new / bc2
+        u = mh / (jnp.sqrt(vh) + spec.eps) + spec.weight_decay * p.astype(jnp.float32)
+        return (lr * u).astype(p.dtype), m_new, v_new
+
+    out = jax.tree_util.tree_map(upd, grads, state["m"], state["v"], params)
+    updates = jax.tree_util.tree_map(lambda o: o[0], out,
+                                     is_leaf=lambda x: isinstance(x, tuple))
+    m = jax.tree_util.tree_map(lambda o: o[1], out,
+                               is_leaf=lambda x: isinstance(x, tuple))
+    v = jax.tree_util.tree_map(lambda o: o[2], out,
+                               is_leaf=lambda x: isinstance(x, tuple))
+    return updates, {"m": m, "v": v, "count": c}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment: O(n+m) state for n×m weights — the
+# memory-sane choice for the 398B config)
+# ---------------------------------------------------------------------------
+
+def _adafactor_init(params):
+    def init(p):
+        if p.ndim >= 2:
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros((*p.shape[:-2], p.shape[-1]), jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    return {"f": jax.tree_util.tree_map(init, params,
+                                        is_leaf=lambda x: hasattr(x, "ndim")),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def _adafactor_update(grads, state, params, lr, spec: OptimizerSpec):
+    c = state["count"] + 1
+    beta = 1.0 - c.astype(jnp.float32) ** (-spec.decay_rate)
+
+    def upd(g, st, p):
+        g = g.astype(jnp.float32)
+        g2 = jnp.square(g) + 1e-30
+        if g.ndim >= 2:
+            vr = beta * st["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+            vc = beta * st["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+            denom = jnp.sqrt(
+                vr[..., None] * vc[..., None, :]
+                / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True)[..., None],
+                              1e-30))
+            u = g / jnp.maximum(denom, 1e-30)
+            new = {"vr": vr, "vc": vc}
+        else:
+            v = beta * st["v"] + (1 - beta) * g2
+            u = g / (jnp.sqrt(v) + 1e-30)
+            new = {"v": v}
+        # update clipping (RMS<=1) per Adafactor
+        rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+        u = u / jnp.maximum(1.0, rms / spec.clip_threshold)
+        u = u + spec.weight_decay * p.astype(jnp.float32)
+        return (lr * u).astype(p.dtype), new
+
+    flat, treedef = jax.tree_util.tree_flatten(params)
+    gflat = treedef.flatten_up_to(grads)
+    sflat = treedef.flatten_up_to(state["f"])
+    pairs = [upd(g, s, p) for g, s, p in zip(gflat, sflat, flat)]
+    updates = treedef.unflatten([u for u, _ in pairs])
+    new_f = treedef.unflatten([s for _, s in pairs])
+    return updates, {"f": new_f, "count": c}
+
+
+def make_optimizer(name: str, spec: OptimizerSpec = OptimizerSpec()
+                   ) -> Tuple[Callable, Callable]:
+    if name == "adamw":
+        return _adamw_init, partial(_adamw_update, spec=dataclasses.replace(
+            spec, name="adamw"))
+    if name == "adafactor":
+        return _adafactor_init, partial(_adafactor_update, spec=dataclasses.replace(
+            spec, name="adafactor"))
+    raise ValueError(f"unknown optimizer {name!r}")

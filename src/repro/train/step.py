@@ -1,0 +1,119 @@
+"""Train / prefill / decode step factories.
+
+``make_train_step(cfg, run, total_steps)`` builds the pure function
+   (state, batch) -> (state, metrics)
+with loss = CE (+ MoE aux), global-norm clipping, LR schedule, AdamW/Adafactor,
+optional microbatched gradient accumulation (scan) and int8 error-feedback
+gradient compression.  The function is pjit-ed by the launcher with the
+sharding trees from ``distributed/sharding.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models import model as M
+from repro.models.layers import cross_entropy
+from repro.optim import (clip_by_global_norm, global_norm, lr_schedule,
+                         make_optimizer)
+from repro.optim.compression import init_ef_state, int8_ef_compress
+
+
+def init_train_state(cfg: ModelConfig, run: RunConfig, seed: int = 0) -> dict:
+    params = M.init_params(cfg, seed)
+    opt_init, _ = make_optimizer(run.optimizer)
+    state = {"params": params, "opt": opt_init(params),
+             "step": jnp.zeros((), jnp.int32)}
+    if run.grad_compression == "int8_ef":
+        state["ef"] = init_ef_state(params)
+    return state
+
+
+def abstract_train_state(cfg: ModelConfig, run: RunConfig) -> dict:
+    """ShapeDtypeStruct mirror of init_train_state — used by the dry-run."""
+    return jax.eval_shape(lambda: init_train_state(cfg, run))
+
+
+def make_train_step(cfg: ModelConfig, run: RunConfig, total_steps: int):
+    opt_init, opt_update = make_optimizer(run.optimizer)
+    compute_dtype = jnp.dtype(run.compute_dtype)
+
+    def loss_fn(params, batch):
+        logits, aux = M.forward_train(cfg, params, batch,
+                                      compute_dtype=compute_dtype,
+                                      remat_policy=run.remat_policy,
+                                      triangular_skip=run.triangular_attn)
+        loss = cross_entropy(logits, batch["labels"], cfg.vocab_size)
+        total = loss + cfg.moe_aux_loss_weight * aux
+        return total, {"loss": loss, "aux_loss": aux}
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def compute_grads(params, batch):
+        if run.microbatches <= 1:
+            (t, m), g = grad_fn(params, batch)
+            return g, m
+        # gradient accumulation: split batch on the leading axis and scan
+        def split(x):
+            b = x.shape[0]
+            assert b % run.microbatches == 0
+            return x.reshape(run.microbatches, b // run.microbatches,
+                             *x.shape[1:])
+        micro = jax.tree_util.tree_map(split, batch)
+        zero = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def body(acc, mb):
+            (t, m), g = grad_fn(params, mb)
+            acc = jax.tree_util.tree_map(
+                lambda a, x: a + x.astype(jnp.float32), acc, g)
+            return acc, m
+        g, ms = jax.lax.scan(body, zero, micro)
+        g = jax.tree_util.tree_map(lambda x: x / run.microbatches, g)
+        m = jax.tree_util.tree_map(lambda x: jnp.mean(x), ms)
+        return g, m
+
+    def train_step(state: dict, batch: dict) -> Tuple[dict, Dict[str, Any]]:
+        grads, metrics = compute_grads(state["params"], batch)
+        new_state = dict(state)
+        if run.grad_compression == "int8_ef":
+            grads, new_state["ef"] = int8_ef_compress(grads, state["ef"])
+        grads, gnorm = clip_by_global_norm(grads, run.grad_clip)
+        lr = lr_schedule(state["step"], base_lr=run.learning_rate,
+                         warmup_steps=run.warmup_steps, total_steps=total_steps)
+        updates, new_opt = opt_update(grads, state["opt"], state["params"], lr)
+        new_state["params"] = jax.tree_util.tree_map(
+            lambda p, u: (p - u.astype(p.dtype)), state["params"], updates)
+        new_state["opt"] = new_opt
+        new_state["step"] = state["step"] + 1
+        metrics = dict(metrics, grad_norm=gnorm, lr=lr,
+                       param_norm=global_norm(new_state["params"]))
+        return new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, run: RunConfig):
+    compute_dtype = jnp.dtype(run.compute_dtype)
+
+    def prefill_step(params, batch, cache):
+        return M.prefill(cfg, params, batch, cache, compute_dtype=compute_dtype,
+                         triangular_skip=run.triangular_attn)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, run: RunConfig, *,
+                     mla_absorbed: bool = False):
+    compute_dtype = jnp.dtype(run.compute_dtype)
+
+    def decode_step(params, cache, tokens, pos):
+        return M.decode_step(cfg, params, cache, tokens, pos,
+                             compute_dtype=compute_dtype,
+                             mla_absorbed=mla_absorbed)
+
+    return decode_step

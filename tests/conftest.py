@@ -1,0 +1,9 @@
+# NOTE: no XLA_FLAGS here — smoke tests and benches must see 1 device
+# (the 512-device override belongs to launch/dryrun.py ONLY).
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

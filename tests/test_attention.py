@@ -1,0 +1,98 @@
+"""Flash attention (custom VJP) vs direct oracle; decode/train consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import chunked_attention, direct_attention
+
+
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 17), (False, 0)])
+def test_flash_matches_direct_fwd_bwd(causal, window, rng):
+    B, S, T, G, M, D = 2, 96, 96, 2, 3, 16
+    q = jnp.asarray(rng.normal(size=(B, S, G, M, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, T, G, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, T, G, D)), jnp.float32)
+    qp = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    kp = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    f = lambda q, k, v: jnp.sum(jnp.sin(chunked_attention(
+        q, k, v, qp, kp, causal=causal, window=window, q_block=32,
+        kv_block=32)))
+    g = lambda q, k, v: jnp.sum(jnp.sin(direct_attention(
+        q, k, v, qp, kp, causal=causal, window=window)))
+    np.testing.assert_allclose(f(q, k, v), g(q, k, v), rtol=2e-5)
+    for a, b in zip(jax.grad(f, (0, 1, 2))(q, k, v),
+                    jax.grad(g, (0, 1, 2))(q, k, v)):
+        np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-5)
+
+
+def test_flash_ragged_padding(rng):
+    B, S, T, G, M, D = 2, 75, 96, 2, 1, 16
+    q = jnp.asarray(rng.normal(size=(B, S, G, M, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, T, G, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, T, G, D)), jnp.float32)
+    qp = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    kp = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    out = chunked_attention(q, k, v, qp, kp, causal=False, q_block=32,
+                            kv_block=32)
+    ref = direct_attention(q, k, v, qp, kp, causal=False)
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=1e-6)
+
+
+def test_triangular_skip_equivalent(rng):
+    B, S, G, M, D = 2, 128, 2, 2, 16
+    q = jnp.asarray(rng.normal(size=(B, S, G, M, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, G, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, G, D)), jnp.float32)
+    qp = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    base = chunked_attention(q, k, v, qp, qp, causal=True, q_block=32,
+                             kv_block=32, triangular_skip=False)
+    skip = chunked_attention(q, k, v, qp, qp, causal=True, q_block=32,
+                             kv_block=32, triangular_skip=True)
+    np.testing.assert_allclose(base, skip, rtol=1e-5, atol=1e-6)
+
+
+def test_gqa_decode_matches_train(rng):
+    """Teacher-forced forward == prefill+decode token-by-token (GQA arch)."""
+    from repro.configs import get_config, smoke
+    from repro.models import model as M
+    cfg = smoke(get_config("h2o-danube-1.8b"), sliding_window=0)
+    params = M.init_params(cfg, 0)
+    B, S = 2, 24
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)))
+    ref, _ = M.forward_train(cfg, params, {"tokens": toks},
+                             remat_policy="none", compute_dtype=jnp.float32)
+    cache = M.init_cache(cfg, B, S + 2, dtype=jnp.float32)
+    _, cache = M.prefill(cfg, params, {"tokens": toks[:, :1]}, cache,
+                         compute_dtype=jnp.float32)
+    outs = []
+    for t in range(1, S):
+        lg, cache = M.decode_step(cfg, params, cache, toks[:, t:t + 1],
+                                  jnp.int32(t), compute_dtype=jnp.float32)
+        outs.append(lg[:, 0])
+    np.testing.assert_allclose(np.asarray(jnp.stack(outs, 1)),
+                               np.asarray(ref[:, 1:]), rtol=2e-3, atol=2e-4)
+
+
+def test_mla_decode_matches_train_and_absorbed(rng):
+    from repro.configs import get_config, smoke
+    from repro.models import model as M
+    cfg = smoke(get_config("deepseek-v2-lite-16b"))
+    params = M.init_params(cfg, 0)
+    B, S = 2, 16
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)))
+    ref, _ = M.forward_train(cfg, params, {"tokens": toks},
+                             remat_policy="none", compute_dtype=jnp.float32)
+    for absorbed in (False, True):
+        cache = M.init_cache(cfg, B, S + 2, dtype=jnp.float32)
+        _, cache = M.prefill(cfg, params, {"tokens": toks[:, :1]}, cache,
+                             compute_dtype=jnp.float32)
+        outs = []
+        for t in range(1, S):
+            lg, cache = M.decode_step(cfg, params, cache, toks[:, t:t + 1],
+                                      jnp.int32(t), compute_dtype=jnp.float32,
+                                      mla_absorbed=absorbed)
+            outs.append(lg[:, 0])
+        np.testing.assert_allclose(np.asarray(jnp.stack(outs, 1)),
+                                   np.asarray(ref[:, 1:]), rtol=2e-3,
+                                   atol=2e-4)

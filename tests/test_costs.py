@@ -1,0 +1,49 @@
+"""Analytic FLOPs model validated against XLA's counts on configs where XLA
+is trustworthy (single-layer, single-block: trip counts are all 1)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import costs
+from repro.configs import get_config, smoke
+from repro.configs.base import ShapeConfig
+from repro.models import model as M
+
+
+@pytest.mark.parametrize("arch", ["stablelm-1.6b", "deepseek-7b"])
+def test_forward_flops_matches_xla(arch):
+    cfg = dataclasses.replace(
+        smoke(get_config(arch), d_model=128, head_dim=32, d_ff=256,
+              vocab_size=512), num_layers=1)
+    B, S = 2, 256                      # one attention block -> nq = nk = 1
+    toks = jnp.zeros((B, S), jnp.int32)
+
+    def fwd(params):
+        lg, _ = M.forward_train(cfg, params, {"tokens": toks},
+                                remat_policy="none",
+                                compute_dtype=jnp.float32)
+        return lg.sum()
+
+    params = M.init_params(cfg, 0)
+    c = jax.jit(fwd).lower(params).compile()
+    xla = c.cost_analysis()["flops"]
+    ours = costs.forward_flops(cfg, B, S, kind="train")
+    # fwd+sum: XLA counts a few % of elementwise extras
+    assert 0.75 * ours < xla < 1.45 * ours, (ours, xla)
+
+
+def test_roofline_terms_sane():
+    cfg = get_config("stablelm-1.6b")
+    shp = ShapeConfig("train_4k", 4096, 256, "train")
+    t = costs.roofline_terms(cfg, shp, chips=256, wire_bytes=10e9)
+    assert t["compute_s"] > 0 and t["memory_s"] > 0
+    assert 0 < t["useful_ratio"] <= 1.2
+    assert t["bottleneck"] in ("compute", "memory", "collective")
+    # decode is memory-bound on the cache
+    shp_d = ShapeConfig("decode_32k", 32768, 128, "decode")
+    td = costs.roofline_terms(cfg, shp_d, chips=256, wire_bytes=1e6,
+                              cache_len=32768)
+    assert td["bottleneck"] == "memory"

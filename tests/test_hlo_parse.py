@@ -1,0 +1,35 @@
+"""HLO collective parser: loop-trip correction on a synthetic module."""
+from repro.analysis.hlo import collective_wire_bytes, shape_bytes
+
+SYNTH = """\
+HloModule test
+
+%body.1 (p: (s32[], f32[8])) -> (s32[], f32[8]) {
+  %ar = f32[1024]{0} all-reduce(%x), replica_groups={}
+  ROOT %t = tuple()
+}
+
+%cond.1 (p: (s32[], f32[8])) -> pred[] {
+  %c = s32[] constant(24)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+ENTRY %main (a: f32[8]) -> f32[8] {
+  %g = bf16[512]{0} all-gather(%a), replica_groups={}
+  %w = (s32[], f32[8]) while(%init), condition=%cond.1, body=%body.1
+  ROOT %r = f32[8] get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_shape_bytes():
+    assert shape_bytes("f32[1024]") == 4096
+    assert shape_bytes("(f32[4], bf16[8])") == 32
+
+
+def test_loop_trip_correction():
+    out = collective_wire_bytes(SYNTH)
+    # all-reduce: 1024*4 bytes * 2 (ring) * 24 trips; all-gather: 512*2 once
+    assert out["all-reduce"] == 1024 * 4 * 24
+    assert out["all-gather"] == 512 * 2
+    assert out["wire_bytes"] == 2 * 1024 * 4 * 24 + 512 * 2

@@ -1,0 +1,80 @@
+"""Pallas kernels vs pure-jnp oracles — shape/dtype sweeps in interpret mode
+(deliverable c: per-kernel allclose against ref.py)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.banked_copy.kernel import banked_copy
+from repro.kernels.banked_copy.ref import banked_copy_ref
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.paged_attention.ops import paged_attention
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("BH,BG,S,T,D,causal,win", [
+    (4, 2, 256, 256, 64, True, 0),
+    (2, 2, 512, 512, 128, True, 0),
+    (4, 4, 256, 512, 64, False, 0),
+    (2, 1, 256, 256, 64, True, 64),
+])
+def test_flash_kernel(BH, BG, S, T, D, causal, win, dtype, rng):
+    q = jnp.asarray(rng.normal(size=(BH, S, D)), dtype)
+    k = jnp.asarray(rng.normal(size=(BG, T, D)), dtype)
+    v = jnp.asarray(rng.normal(size=(BG, T, D)), dtype)
+    out = flash_attention_fwd(q, k, v, causal=causal, window=win,
+                              q_block=128, kv_block=128, interpret=True)
+    kb = jnp.repeat(k, BH // BG, axis=0)
+    vb = jnp.repeat(v, BH // BG, axis=0)
+    ref = attention_ref(q, kb, vb, causal=causal, window=win)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,G,D,NB,bs,mb", [
+    (2, 8, 2, 64, 16, 16, 4),
+    (3, 4, 1, 128, 32, 8, 6),
+    (2, 16, 4, 64, 64, 32, 3),
+])
+def test_paged_attention_kernel(B, H, G, D, NB, bs, mb, dtype, rng):
+    q = jnp.asarray(rng.normal(size=(B, H, D)), dtype)
+    kp = jnp.asarray(rng.normal(size=(NB, bs, G, D)), dtype)
+    vp = jnp.asarray(rng.normal(size=(NB, bs, G, D)), dtype)
+    tbl = np.full((B, mb), -1, np.int32)
+    lens = np.zeros((B,), np.int32)
+    for b in range(B):
+        nb_used = int(rng.integers(1, mb + 1))
+        tbl[b, :nb_used] = rng.choice(NB, nb_used, replace=False)
+        lens[b] = nb_used * bs - int(rng.integers(0, bs))
+    out = paged_attention(q, kp, vp, jnp.asarray(tbl), jnp.asarray(lens),
+                          interpret=True)
+    ref = paged_attention_ref(q, kp, vp, jnp.asarray(tbl), jnp.asarray(lens))
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int32])
+@pytest.mark.parametrize("B,nblk,NB,bs,W", [
+    (2, 4, 32, 16, 128), (3, 2, 16, 8, 256), (1, 8, 64, 32, 64)])
+def test_banked_copy_kernel(B, nblk, NB, bs, W, dtype, rng):
+    if dtype == jnp.int32:
+        pool = jnp.asarray(rng.integers(0, 100, (NB, bs, W)), dtype)
+        new = jnp.asarray(rng.integers(0, 100, (B, nblk, bs, W)), dtype)
+    else:
+        pool = jnp.asarray(rng.normal(size=(NB, bs, W)), dtype)
+        new = jnp.asarray(rng.normal(size=(B, nblk, bs, W)), dtype)
+    tbl = np.full((B, nblk), -1, np.int32)
+    used = rng.choice(NB, B * nblk, replace=False)
+    k = 0
+    for b in range(B):
+        nu = int(rng.integers(1, nblk + 1))
+        tbl[b, :nu] = used[k:k + nu]
+        k += nu
+    out = banked_copy(pool, new, jnp.asarray(tbl), interpret=True)
+    ref = banked_copy_ref(pool, new, jnp.asarray(tbl))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))

@@ -1,0 +1,97 @@
+"""Simulator + address-map invariants (hypothesis property tests) and the
+paper's headline numbers at reduced scale."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.address import (MemoryGeometry, fractal_permute,
+                                interleave_across_banks, map_beat)
+from repro.core.simulator import SimParams, Trace, simulate
+from repro.core.traffic import adas_mixed_trace, bulk_linear, random_uniform
+
+
+@given(st.integers(min_value=0, max_value=2**19 - 1))
+@settings(max_examples=50, deadline=None)
+def test_burst4_hits_distinct_clusters(base):
+    base = base * 4                       # aligned burst-4
+    c, a, b = map_beat(np.arange(base, base + 4))
+    assert len(set(c.tolist())) == 4      # rule 1: split-by-4
+
+
+@given(st.integers(min_value=0, max_value=2**15 - 1))
+@settings(max_examples=50, deadline=None)
+def test_burst16_hits_distinct_arrays(base):
+    base = base * 16                      # aligned burst-16
+    c, a, b = map_beat(np.arange(base, base + 16))
+    assert len(set(zip(c.tolist(), a.tolist()))) == 16
+
+
+@given(st.integers(min_value=0, max_value=2**10 - 1))
+@settings(max_examples=20, deadline=None)
+def test_linear_run_is_bank_conflict_free(block):
+    """256 consecutive aligned beats touch every (cluster,array,bank) once."""
+    base = block * 256
+    c, a, b = map_beat(np.arange(base, base + 256))
+    assert len(set(zip(c.tolist(), a.tolist(), b.tolist()))) == 256
+
+
+@given(st.integers(min_value=1, max_value=4096))
+@settings(max_examples=30, deadline=None)
+def test_fractal_permute_is_bijection(n):
+    p = fractal_permute(n)
+    assert sorted(p.tolist()) == list(range(n))
+
+
+@given(st.integers(min_value=1, max_value=512),
+       st.sampled_from([4, 8, 16]))
+@settings(max_examples=30, deadline=None)
+def test_interleave_balanced(n_items, banks):
+    a = interleave_across_banks(n_items, banks)
+    load = np.bincount(a, minlength=banks)
+    assert load.max() - load.min() <= 1 + n_items // banks // 2
+
+
+def test_beat_conservation_and_throughput_bounds(rng):
+    X, N = 4, 60
+    tr = Trace((rng.random((X, N)) < 0.5).astype(np.int32),
+               np.full((X, N), 8, np.int32),
+               rng.integers(0, 2**20 - 8, (X, N)).astype(np.int32))
+    m = simulate(tr, SimParams(max_cycles=4000))
+    assert bool(m["all_done"])
+    # conservation: every read beat returned exactly once
+    n_read_beats = int((tr.burst * (1 - tr.is_write)).sum())
+    assert int(m["beats_done"].sum()) == n_read_beats
+    assert float(m["read_throughput"].max()) <= 1.0 + 1e-6
+    assert float(m["write_throughput"].max()) <= 1.0 + 1e-6
+
+
+def test_paper_headline_numbers():
+    """Table I: ~36-cycle read latency at outstanding=1; Fig 4: ≥93 % per-port
+    throughput at 16 masters full duplex; flat across master counts."""
+    rng = np.random.default_rng(0)
+    tr1 = Trace(np.zeros((1, 64), np.int32), np.full((1, 64), 16, np.int32),
+                rng.integers(0, 2**20 - 16, (1, 64)).astype(np.int32))
+    m1 = simulate(tr1, SimParams(outstanding=1, max_cycles=4000))
+    assert 30 <= float(m1["read_lat_avg"][0]) <= 42      # paper: 36
+
+    tr16 = random_uniform(16, 120, burst=16, full_duplex=True)
+    m16 = simulate(tr16, SimParams(max_cycles=4000))
+    assert float(m16["read_throughput"][:16].mean()) > 0.93
+    assert float(m16["write_throughput"][16:].mean()) > 0.95
+
+
+def test_isolation_interference_bounded():
+    from repro.core.qos import interference_report, regions_isolated
+    full = adas_mixed_trace(16, max_txns=150)
+    assert regions_isolated(full)
+    victim = Trace(full.is_write[:1], full.burst[:1], full.addr[:1])
+    rep = interference_report(victim, full, SimParams(max_cycles=25_000))
+    assert rep["read_lat_degradation"] < 60
+
+
+def test_linear_banking_collapses_on_streams():
+    tr = bulk_linear(16, 32 * 1024, burst=16)
+    good = simulate(tr, SimParams(max_cycles=8000))
+    bad = simulate(tr, SimParams(banking="linear", max_cycles=8000))
+    assert float(good["read_throughput"].mean()) > \
+        float(bad["read_throughput"].mean()) + 0.2

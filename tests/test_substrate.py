@@ -1,0 +1,103 @@
+"""Data pipeline, checkpoint manager, optimizers, serving pool (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.pipeline import TokenPipeline
+from repro.checkpoint.manager import CheckpointManager
+from repro.optim import clip_by_global_norm, lr_schedule, make_optimizer
+from repro.serving.pool import BankedKVPool
+
+
+def test_pipeline_deterministic_and_resumable():
+    a = TokenPipeline(1000, batch=2, seq_len=16, seed=3)
+    b = TokenPipeline(1000, batch=2, seq_len=16, seed=3)
+    for _ in range(3):
+        np.testing.assert_array_equal(next(a)["tokens"], next(b)["tokens"])
+    ck = a.checkpoint()
+    want = [next(a)["tokens"] for _ in range(2)]
+    c = TokenPipeline(1000, batch=2, seq_len=16, seed=3)
+    c.restore(ck)
+    got = [next(c)["tokens"] for _ in range(2)]
+    for w, g in zip(want, got):
+        np.testing.assert_array_equal(w, g)
+
+
+def test_pipeline_hosts_disjoint():
+    h0 = TokenPipeline(1000, batch=4, seq_len=16, host_id=0, num_hosts=2)
+    h1 = TokenPipeline(1000, batch=4, seq_len=16, host_id=1, num_hosts=2)
+    b0, b1 = next(h0)["tokens"], next(h1)["tokens"]
+    assert not np.array_equal(b0, b1)
+
+
+def test_checkpoint_roundtrip_and_gc(tmp_path):
+    ck = CheckpointManager(tmp_path, keep=2, async_save=False)
+    state = {"a": np.arange(6).reshape(2, 3), "b": {"c": np.float32(1.5)}}
+    for step in (1, 2, 3):
+        ck.save(step, state)
+    assert ck.all_steps() == [2, 3]       # gc keeps 2
+    restored, manifest = ck.restore(state)
+    np.testing.assert_array_equal(restored["a"], state["a"])
+    assert manifest["step"] == 3
+
+
+@pytest.mark.parametrize("name", ["adamw", "adafactor"])
+def test_optimizer_descends_quadratic(name):
+    init, update = make_optimizer(name)
+    params = {"w": jnp.asarray([3.0, -2.0, 1.0])}
+    st_ = init(params)
+    for _ in range(60):
+        g = {"w": 2 * params["w"]}
+        upd, st_ = update(g, st_, params, 0.1)
+        params = jax.tree_util.tree_map(lambda p, u: p - u, params, upd)
+    assert float(jnp.abs(params["w"]).max()) < 0.5
+
+
+def test_clip_and_schedule():
+    t = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(t, 1.0)
+    assert float(norm) == 20.0
+    np.testing.assert_allclose(
+        float(jnp.linalg.norm(clipped["a"])), 1.0, rtol=1e-5)
+    lrs = [float(lr_schedule(jnp.int32(s), base_lr=1.0, warmup_steps=10,
+                             total_steps=100)) for s in range(0, 100, 10)]
+    assert lrs[0] == 0.0 and max(lrs) <= 1.0 and lrs[-1] < lrs[2]
+
+
+@given(st.lists(st.tuples(st.booleans(), st.integers(1, 6)), min_size=1,
+                max_size=60))
+@settings(max_examples=30, deadline=None)
+def test_pool_ownership_invariant(ops):
+    """Any alloc/free schedule preserves exclusive block ownership."""
+    pool = BankedKVPool(128, 16, num_banks=8)
+    live = []
+    rid = 0
+    for is_free, n in ops:
+        if is_free and live:
+            pool.free(live.pop(0))
+        else:
+            rid += 1
+            if pool.alloc(rid, n) is not None:
+                live.append(rid)
+        assert pool.check_isolation()
+
+
+def test_pool_fractal_beats_sequential_balance():
+    rng = np.random.default_rng(0)
+    worst = {}
+    for placement in ("fractal", "sequential"):
+        pool = BankedKVPool(256, 16, num_banks=16, placement=placement)
+        live, w = [], 1.0
+        for t in range(200):
+            if live and rng.random() < 0.45:
+                pool.free(live.pop(int(rng.integers(len(live)))))
+            else:
+                r = 1000 + t
+                if pool.alloc(r, int(rng.integers(1, 6))) is not None:
+                    live.append(r)
+            if (pool.owner >= 0).sum() >= 16:
+                w = max(w, pool.imbalance())
+        worst[placement] = w
+    assert worst["fractal"] < worst["sequential"]
