@@ -5,7 +5,6 @@ Every function returns a dict of results and asserts the paper's headline
 claims (with tolerances documented in EXPERIMENTS.md §Paper-fidelity)."""
 from __future__ import annotations
 
-import time
 from typing import Dict
 
 import numpy as np

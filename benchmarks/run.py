@@ -16,10 +16,12 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-scale transaction counts (slow on 1 CPU)")
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated job names to run")
     args = ap.parse_args()
 
     from benchmarks import paper_figures as F
+    from benchmarks.scenario_sweep import scenario_sweep
 
     scale = dict(num_txns=1000) if args.full else {}
     jobs = [
@@ -34,9 +36,16 @@ def main() -> None:
         ("qos_isolation", lambda: F.qos_isolation()),
         ("pool_balance", lambda: F.pool_balance()),
         ("moe_whitening", lambda: F.moe_whitening()),
+        ("scenario_sweep", lambda: scenario_sweep(
+            txns=128 if args.full else 64,
+            max_cycles=16_000 if args.full else 8000)),
     ]
     if args.only:
-        jobs = [j for j in jobs if j[0] == args.only]
+        wanted = args.only.split(",")
+        unknown = set(wanted) - {j[0] for j in jobs}
+        if unknown:
+            raise SystemExit(f"unknown --only jobs: {sorted(unknown)}")
+        jobs = [j for j in jobs if j[0] in wanted]
 
     results = {}
     print("name,seconds,derived")

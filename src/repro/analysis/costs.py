@@ -20,7 +20,6 @@ Counting rules:
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
 from typing import Dict
 

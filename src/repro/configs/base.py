@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from typing import Tuple
 
 VOCAB_PAD_MULTIPLE = 2048  # padded so vocab shards evenly over the 'model' axis
 

@@ -10,7 +10,6 @@ Two layers of checking:
 """
 from __future__ import annotations
 
-from dataclasses import replace
 from typing import Dict, Tuple
 
 import numpy as np

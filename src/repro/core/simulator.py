@@ -13,8 +13,17 @@ Faithful model of the prototype:
     cycle the last beat leaves the return bus — the AXI-observable latency the
     paper reports; AXI5 read-data chunking ⇒ beats may return out of order.
 
-Everything is a fixed-size jnp array and one ``lax.scan`` over cycles, so the
-whole Fig-4 sweep (1..16 masters) runs as a single vmapped scan.
+Everything is a fixed-size jnp array and one ``lax.scan`` over cycles, so a
+whole sweep runs as a single vmapped scan: :func:`simulate_batch` evaluates a
+stack of (trace, dynamic-parameter) points in one compiled ``vmap``-of-``scan``
+call.  Parameters that only appear as *values* in the dataflow (outstanding
+credits, buffer depth, pipeline latencies, bank occupancy) are passed as a
+traced ``dyn`` vector so they can differ per point; parameters that shape the
+program (geometry, banking, burst ceiling, cycle count) stay static.
+
+Traces may carry per-transaction earliest-issue times (``Trace.start``), which
+gates command acceptance — this is how the scenario engine expresses injection
+rates and sensor periodicity (camera vblank, Radar chirp cadence).
 
 Comparator topologies (§II-A, used by benchmarks/comparators.py):
   * ``banking='paper'``     — the proposed structure
@@ -25,18 +34,22 @@ Comparator topologies (§II-A, used by benchmarks/comparators.py):
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass
-from functools import partial
-from typing import Dict, Optional
+from dataclasses import dataclass, replace as dataclasses_replace
+from functools import lru_cache, partial
+from typing import Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.address import MemoryGeometry, flat_bank_id, map_beat
+from repro.core.address import MemoryGeometry, flat_bank_id
 
 INF32 = jnp.int32(2**30)
+
+#: SimParams fields that enter the scan as traced *values* (per-point in a
+#: batched sweep).  Order defines the layout of the ``dyn`` vector.
+DYN_FIELDS = ("outstanding", "split_buffer", "cmd_latency", "ret_latency",
+              "bank_occupancy", "bank_latency")
 
 
 @dataclass(frozen=True)
@@ -47,17 +60,29 @@ class SimParams:
     cmd_latency: int = 8         # port -> bank-queue pipeline (fabric cycles)
     ret_latency: int = 9         # bank -> port pipeline
     bank_occupancy: int = 2      # SRAM at 500 MHz vs 1 GHz fabric
-    bank_latency: int = 2        # access latency before data heads back
+    bank_latency: int = 2       # access latency before data heads back
     expand_rate: int = 4         # split-by-4: beats entering fabric per cycle
     max_burst: int = 16
     banking: str = "paper"       # paper | linear | no_fractal
     max_cycles: int = 200_000
+    slots_override: Optional[int] = None  # force a common ring size (batching)
 
     @property
     def slots_per_master(self) -> int:
         # enough ring slots for every accepted command's beats
+        if self.slots_override is not None:
+            return int(self.slots_override)
         return int(2 ** np.ceil(np.log2(
             max(self.outstanding * self.max_burst, self.split_buffer) * 2)))
+
+    def static_key(self) -> tuple:
+        """Fields that must agree across every point of one compiled batch."""
+        return (self.geom, self.expand_rate, self.max_burst, self.banking,
+                self.max_cycles)
+
+    def dyn_vector(self) -> np.ndarray:
+        """The traced per-point parameter vector (see ``DYN_FIELDS``)."""
+        return np.array([getattr(self, f) for f in DYN_FIELDS], np.int32)
 
 
 def bank_of(addr, prm: SimParams):
@@ -83,10 +108,17 @@ def bank_of(addr, prm: SimParams):
 
 @dataclass
 class Trace:
-    """is_write/burst/addr: [X, N] int32 (addr in beat units; burst==0 ⇒ pad)."""
+    """is_write/burst/addr: [X, N] int32 (addr in beat units; burst==0 ⇒ pad).
+
+    ``start`` (optional, [X, N] int32) is the earliest fabric cycle at which a
+    transaction may be *offered* at its port — the injection-timing hook used
+    by the scenario engine.  ``None`` means every transaction is ready at
+    cycle 0 (the original back-to-back behaviour, bit-for-bit).
+    """
     is_write: np.ndarray
     burst: np.ndarray
     addr: np.ndarray
+    start: Optional[np.ndarray] = None
 
     @property
     def num_masters(self) -> int:
@@ -95,6 +127,11 @@ class Trace:
     @property
     def num_txns(self) -> int:
         return self.is_write.shape[1]
+
+    def start_or_zeros(self) -> np.ndarray:
+        if self.start is None:
+            return np.zeros_like(np.asarray(self.is_write, np.int32))
+        return np.asarray(self.start, np.int32)
 
 
 def _precompute_beats(trace: Trace, prm: SimParams):
@@ -117,19 +154,86 @@ def simulate(trace: Trace, prm: SimParams = SimParams()) -> Dict[str, np.ndarray
     fn = _core_jitted(prm)
     out = fn(jnp.asarray(trace.is_write, jnp.int32),
              jnp.asarray(trace.burst, jnp.int32),
-             jnp.asarray(banks_np))
+             jnp.asarray(banks_np),
+             jnp.asarray(trace.start_or_zeros()),
+             jnp.asarray(prm.dyn_vector()))
     return jax.tree_util.tree_map(np.asarray, out)
 
 
-from functools import lru_cache
+def batch_envelope(prms: Sequence[SimParams]) -> SimParams:
+    """The static envelope shared by a batch: every point must agree on the
+    program-shaping fields; the beat-slot ring is sized for the largest
+    point so one compiled scan serves all of them."""
+    if not prms:
+        raise ValueError("empty parameter batch")
+    key = prms[0].static_key()
+    for p in prms[1:]:
+        if p.static_key() != key:
+            raise ValueError(
+                "batched points must share geom/expand_rate/max_burst/"
+                f"banking/max_cycles; got {p.static_key()} vs {key}")
+    slots = max(p.slots_per_master for p in prms)
+    return dataclasses_replace(prms[0], slots_override=slots)
+
+
+def simulate_batch(traces: Sequence[Trace],
+                   prms: Sequence[SimParams]) -> Dict[str, np.ndarray]:
+    """Run B (trace, params) points as ONE compiled ``vmap``-of-``scan``.
+
+    All traces must already share a common [X, N] shape (see
+    ``core.traffic.stack_traces``) and all params must share their static
+    envelope (see :func:`batch_envelope`).  Returns the same metrics dict as
+    :func:`simulate` with a leading batch axis; each row is bit-for-bit equal
+    to ``simulate(traces[i], replace(prms[i], slots_override=envelope))``.
+    """
+    if len(traces) != len(prms):
+        raise ValueError(f"{len(traces)} traces vs {len(prms)} param points")
+    shape = (traces[0].is_write.shape)
+    for t in traces[1:]:
+        if t.is_write.shape != shape:
+            raise ValueError("all traces in a batch must share [X, N]; "
+                             f"got {t.is_write.shape} vs {shape}")
+    env = batch_envelope(prms)
+    banks = np.stack([_precompute_beats(t, p)[0]
+                      for t, p in zip(traces, prms)])
+    iw = np.stack([np.asarray(t.is_write, np.int32) for t in traces])
+    b = np.stack([np.asarray(t.burst, np.int32) for t in traces])
+    st = np.stack([t.start_or_zeros() for t in traces])
+    dyn = np.stack([p.dyn_vector() for p in prms])
+    fn = _batch_jitted(env)
+    out = fn(jnp.asarray(iw), jnp.asarray(b), jnp.asarray(banks),
+             jnp.asarray(st), jnp.asarray(dyn))
+    return jax.tree_util.tree_map(np.asarray, out)
+
+
+def _static_prm(prm: SimParams) -> SimParams:
+    """Canonical jit-cache key: dyn fields travel as traced values, so two
+    SimParams differing only in them share one compiled program.  The ring
+    size is pinned first (it derives from ``outstanding``/``split_buffer``
+    when not overridden)."""
+    return dataclasses_replace(prm, slots_override=prm.slots_per_master,
+                               **{f: 0 for f in DYN_FIELDS})
+
+
+def _core_jitted(prm: SimParams):
+    return _core_jitted_cached(_static_prm(prm))
+
+
+def _batch_jitted(prm: SimParams):
+    return _batch_jitted_cached(_static_prm(prm))
 
 
 @lru_cache(maxsize=32)
-def _core_jitted(prm: SimParams):
+def _core_jitted_cached(prm: SimParams):
     return jax.jit(partial(_core, prm=prm))
 
 
-def _core(tx_write, tx_burst, tx_banks, *, prm: SimParams):
+@lru_cache(maxsize=32)
+def _batch_jitted_cached(prm: SimParams):
+    return jax.jit(jax.vmap(partial(_core, prm=prm)))
+
+
+def _core(tx_write, tx_burst, tx_banks, tx_start, dyn, *, prm: SimParams):
     X, N = tx_write.shape
     P = prm.slots_per_master
     S = X * P
@@ -137,12 +241,15 @@ def _core(tx_write, tx_burst, tx_banks, *, prm: SimParams):
 
     master_of_slot = jnp.repeat(jnp.arange(X, dtype=jnp.int32), P)
 
-    trace_burst = tx_burst
+    dyn = jnp.asarray(dyn, jnp.int32)
+    d_outstanding, d_split_buffer, d_cmd_lat, d_ret_lat, d_bank_occ, \
+        d_bank_lat = (dyn[i] for i in range(len(DYN_FIELDS)))
+
     state = dict(
         now=jnp.int32(0),
         next_txn=jnp.zeros((X,), jnp.int32),
         outstanding=jnp.zeros((X, 2), jnp.int32),  # [:,0] read, [:,1] write
-        credits=jnp.full((X, 2), prm.split_buffer, jnp.int32),
+        credits=jnp.zeros((X, 2), jnp.int32) + d_split_buffer,
         beats_issued=jnp.zeros((X,), jnp.int32),
         fwd_free=jnp.zeros((X,), jnp.int32),       # W-channel data-bus free time
         # beat slots (ring per master, flattened [S])
@@ -170,16 +277,17 @@ def _core(tx_write, tx_burst, tx_banks, *, prm: SimParams):
         nt_c = jnp.minimum(nt, N - 1)
         burst = tx_burst[jnp.arange(X), nt_c]
         is_w = tx_write[jnp.arange(X), nt_c]
+        ready = tx_start[jnp.arange(X), nt_c] <= now
         dirn = is_w  # 0 = read, 1 = write (AXI channels are independent)
-        can = (has_txn & (burst > 0)
-               & (st["outstanding"][jnp.arange(X), dirn] < prm.outstanding)
+        can = (has_txn & (burst > 0) & ready
+               & (st["outstanding"][jnp.arange(X), dirn] < d_outstanding)
                & (st["credits"][jnp.arange(X), dirn] >= burst)
                & ((is_w == 0) | (st["fwd_free"] <= now)))
         # beat arrival times: reads expand 4/cycle at the splitter; write data
         # is paced by the 1-beat/cycle port bus
         offs = jnp.arange(prm.max_burst, dtype=jnp.int32)
         pace = jnp.where(is_w[:, None] > 0, offs, offs // prm.expand_rate)
-        arrive = now + prm.cmd_latency + pace                   # [X, mb]
+        arrive = now + d_cmd_lat + pace                         # [X, mb]
         bvalid = (offs[None, :] < burst[:, None]) & can[:, None]
         ring = (st["beats_issued"][:, None] + offs[None, :]) % P
         flat = jnp.arange(X)[:, None] * P + ring
@@ -227,14 +335,13 @@ def _core(tx_write, tx_burst, tx_banks, *, prm: SimParams):
                                        num_segments=NB + 1)[:-1]
         granted = is_best & (slot_ids == win_slot[sl_bank])     # [S]
         bank_free = st["bank_free"].at[sl_bank].add(
-            jnp.where(granted, prm.bank_occupancy
+            jnp.where(granted, d_bank_occ
                       + jnp.maximum(0, now - st["bank_free"][sl_bank]), 0))
         bank_rr = st["bank_rr"].at[sl_bank].add(
             jnp.where(granted, (master_of_slot - st["bank_rr"][sl_bank]) % X
                       + 1, 0))
         sl_busy = jnp.where(granted, 2, sl_busy)
-        sl_ready = jnp.where(granted, now + prm.bank_occupancy
-                             + prm.bank_latency, sl_ready)
+        sl_ready = jnp.where(granted, now + d_bank_occ + d_bank_lat, sl_ready)
         freed_r = jax.ops.segment_sum(
             (granted & (sl_write == 0)).astype(jnp.int32), master_of_slot,
             num_segments=X)
@@ -271,7 +378,7 @@ def _core(tx_write, tx_burst, tx_banks, *, prm: SimParams):
 
         remaining = st["remaining"] - rem_dec_w - rem_dec_r
         just_done = (remaining == 0) & (st["remaining"] > 0)
-        complete = jnp.where(just_done, now + prm.ret_latency,
+        complete = jnp.where(just_done, now + d_ret_lat,
                              st["complete_cycle"])
         done_r = jnp.sum(just_done & (tx_write == 0), axis=1)
         done_w = jnp.sum(just_done & (tx_write == 1), axis=1)
@@ -310,7 +417,6 @@ def _metrics(st, burst, is_w, prm: SimParams) -> Dict[str, jnp.ndarray]:
         span = jnp.maximum(last - first, 1).astype(jnp.float32)
         return jnp.where(jnp.sum(sel, 1) > 0, beats / span, 0.0)
 
-    active = jnp.sum(real, axis=1) > 0
     return {
         "throughput": tput(real & done),
         "read_throughput": tput(r),

@@ -7,7 +7,7 @@ ports, matching the replicated per-channel datapaths of the design).
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -17,12 +17,44 @@ from repro.core.simulator import Trace
 BEAT = 32  # bytes per 256-bit beat
 
 
-def _pad(rows, n=None):
+def pad_rows(rows: Sequence[np.ndarray], n: Optional[int] = None) -> np.ndarray:
+    """Stack variable-length 1-D rows into an [X, n] int32 array, zero-padded
+    (burst==0 rows are ignored by the simulator)."""
     n = n or max(len(r) for r in rows)
     out = np.zeros((len(rows), n), np.int32)
     for i, r in enumerate(rows):
         out[i, :len(r)] = r
     return out
+
+
+_pad = pad_rows  # backwards-compatible internal alias
+
+
+def pad_trace(trace: Trace, num_masters: int, num_txns: int) -> Trace:
+    """Grow a trace to [num_masters, num_txns] with inert padding (burst 0).
+    Padding masters/transactions are never accepted by the simulator, but a
+    common shape is required before stacking traces into one vmapped batch."""
+    X, N = trace.is_write.shape
+    if X > num_masters or N > num_txns:
+        raise ValueError(f"cannot shrink trace {X}x{N} to "
+                         f"{num_masters}x{num_txns}")
+
+    def grow(a, fill=0):
+        out = np.full((num_masters, num_txns), fill, np.int32)
+        out[:X, :N] = a
+        return out
+
+    start = None if trace.start is None else grow(trace.start)
+    return Trace(grow(trace.is_write), grow(trace.burst), grow(trace.addr),
+                 start)
+
+
+def stack_traces(traces: Sequence[Trace]) -> List[Trace]:
+    """Pad a batch of traces to their common [X, N] envelope — the shape
+    contract of :func:`repro.core.simulator.simulate_batch`."""
+    X = max(t.is_write.shape[0] for t in traces)
+    N = max(t.is_write.shape[1] for t in traces)
+    return [pad_trace(t, X, N) for t in traces]
 
 
 def random_uniform(num_masters: int, num_txns: int, *, burst: int = 16,

@@ -11,7 +11,6 @@ from __future__ import annotations
 import argparse
 import time
 
-import jax
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs import get_config, smoke

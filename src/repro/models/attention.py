@@ -102,7 +102,6 @@ def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     """
     B, S, G, M, D = q.shape
     T = k.shape[1]
-    Dv = v.shape[-1]                                   # MLA: Dv may differ from D
     scale = scale if scale is not None else D ** -0.5
     q_block = min(q_block, S)
     kv_block = min(kv_block, T)

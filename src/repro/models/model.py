@@ -15,7 +15,6 @@ super-blocks (1 attention + 7 mamba, MoE on odd positions).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Dict, Optional, Tuple
 
 import jax

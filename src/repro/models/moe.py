@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import math
 from functools import partial
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -206,7 +206,6 @@ def moe_ffn(cfg: ModelConfig, p: dict, x: jax.Array, *,
         # (With batch sharded over 'data' the psum would mix different rows —
         # guard: partial mode only when bspec is None.)
         if mlp_ax is not None and bspec is None:
-            dsh = mesh.shape[mlp_ax]
             di = jax.lax.axis_index(mlp_ax)
             d_loc = wg_l.shape[1]
             x_slice = jax.lax.dynamic_slice_in_dim(

@@ -1,0 +1,23 @@
+"""Declarative ADAS scenario engine (paper §II-C, Figs. 6–7).
+
+A :class:`~repro.scenarios.spec.Scenario` composes per-master traffic models
+(camera frame DMA, Radar chirps, Lidar scatter, AI-accelerator tiles, CPU
+scatter) with QoS classes, memory-region placement, and injection rates, and
+compiles down to the simulator's ``Trace`` format.  ``scenarios.sweep`` runs a
+grid of scenario × parameter points as one compiled ``vmap``-ed scan.
+"""
+from repro.scenarios.spec import (CompiledScenario, MasterSpec, Scenario,
+                                  QOS_CLASSES, compile_scenario)
+from repro.scenarios.generators import GENERATORS
+from repro.scenarios.library import (highway_pilot, parking_surround,
+                                     preset_scenarios, sensor_stress,
+                                     urban_perception)
+from repro.scenarios.sweep import (SweepPoint, SweepResult, run_sweep,
+                                   summarize_point)
+
+__all__ = [
+    "CompiledScenario", "MasterSpec", "Scenario", "QOS_CLASSES",
+    "compile_scenario", "GENERATORS", "SweepPoint", "SweepResult",
+    "run_sweep", "summarize_point", "highway_pilot", "parking_surround",
+    "preset_scenarios", "sensor_stress", "urban_perception",
+]

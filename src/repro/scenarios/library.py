@@ -1,0 +1,73 @@
+"""Preset ADAS scenarios — the master mixes the paper's SoC must serve.
+
+Each preset returns a fresh :class:`Scenario`; tweak via the ``txns``
+argument (transactions per master, the knob that trades fidelity for sim
+time).  Mixes follow the embedded-ADAS platform surveys: redundant cameras +
+Radar + Lidar feeding an AI accelerator, with CPU housekeeping underneath.
+"""
+from __future__ import annotations
+
+from repro.core.address import MemoryGeometry
+from repro.scenarios.spec import MasterSpec, Scenario
+
+
+def urban_perception(txns: int = 256, geom: MemoryGeometry = MemoryGeometry()
+                     ) -> Scenario:
+    """Front + surround cameras feeding two detection NPUs; city speeds."""
+    masters = (
+        [MasterSpec("camera", qos="safety", rate=0.8, txns=txns, seed=s)
+         for s in range(2)] +
+        [MasterSpec("camera", qos="realtime", rate=0.6, txns=txns, seed=10 + s)
+         for s in range(4)] +
+        [MasterSpec("npu", qos="realtime", rate=1.0, txns=txns, seed=20 + s)
+         for s in range(2)] +
+        [MasterSpec("cpu", qos="besteffort", rate=0.3, txns=txns, seed=30)]
+    )
+    return Scenario("urban_perception", masters, geom,
+                    "6 cameras + 2 NPUs + CPU housekeeping")
+
+
+def highway_pilot(txns: int = 256, geom: MemoryGeometry = MemoryGeometry()
+                  ) -> Scenario:
+    """Long-range Radar + Lidar + front camera, fusion NPU, heavier CPU."""
+    masters = (
+        [MasterSpec("radar", qos="safety", rate=0.7, txns=txns, seed=s)
+         for s in range(3)] +
+        [MasterSpec("lidar", qos="safety", rate=0.5, txns=txns, seed=10)] +
+        [MasterSpec("camera", qos="realtime", rate=0.8, txns=txns, seed=20)] +
+        [MasterSpec("npu", qos="realtime", rate=1.0, txns=txns, seed=30)] +
+        [MasterSpec("cpu", qos="besteffort", rate=0.4, txns=txns, seed=40 + s)
+         for s in range(2)]
+    )
+    return Scenario("highway_pilot", masters, geom,
+                    "3 Radar + Lidar + camera + fusion NPU + 2 CPUs")
+
+
+def parking_surround(txns: int = 256, geom: MemoryGeometry = MemoryGeometry()
+                     ) -> Scenario:
+    """Low-speed surround view: many cameras, light compute."""
+    masters = (
+        [MasterSpec("camera", qos="realtime", rate=0.5, txns=txns, seed=s)
+         for s in range(6)] +
+        [MasterSpec("npu", qos="realtime", rate=0.6, txns=txns, seed=10)] +
+        [MasterSpec("cpu", qos="besteffort", rate=0.2, txns=txns, seed=20)]
+    )
+    return Scenario("parking_surround", masters, geom,
+                    "6-camera surround stitch + light NPU")
+
+
+def sensor_stress(txns: int = 256, geom: MemoryGeometry = MemoryGeometry()
+                  ) -> Scenario:
+    """Worst-case contention: every model at full injection on all 16 ports."""
+    models = ["camera", "radar", "lidar", "npu"] * 3 + ["cpu"] * 4
+    qos = (["safety"] * 4 + ["realtime"] * 8 + ["besteffort"] * 4)
+    masters = [MasterSpec(m, qos=q, rate=1.0, txns=txns, seed=i)
+               for i, (m, q) in enumerate(zip(models, qos))]
+    return Scenario("sensor_stress", masters, geom,
+                    "all 16 ports saturated, every traffic model")
+
+
+def preset_scenarios(txns: int = 256):
+    """All presets, for sweeps and benchmarks."""
+    return [urban_perception(txns), highway_pilot(txns),
+            parking_surround(txns), sensor_stress(txns)]

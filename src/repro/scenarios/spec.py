@@ -1,0 +1,166 @@
+"""Declarative scenario spec → simulator ``Trace`` compiler.
+
+A :class:`Scenario` is a list of :class:`MasterSpec`s — traffic model, QoS
+class, memory-region placement, injection rate — plus a shared geometry.
+``compile_scenario`` resolves region placement (explicit beat ranges or an
+automatic equal partition of the address space), invokes each master's
+generator, and pads the rows into one beat-aligned ``Trace`` whose ``start``
+column carries the injection timing.
+
+The QoS classes mirror the paper's §II-C contract:
+
+* ``safety``    — ASIL-rated consumers (braking-path Radar/camera): must see
+                  bounded latency regardless of other masters.
+* ``realtime``  — frame-deadline consumers (viewing cameras, AI accelerator).
+* ``besteffort``— CPU housekeeping and diagnostics.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.address import MemoryGeometry
+from repro.core.simulator import Trace
+from repro.core.traffic import pad_rows
+from repro.scenarios.generators import GENERATORS
+
+QOS_CLASSES = ("safety", "realtime", "besteffort")
+
+#: smallest region (beats) the traffic models can lay out sensibly: double
+#: buffers, weight/output sub-regions, and ring buffers all need headroom
+MIN_REGION_BEATS = 256
+
+
+@dataclass
+class MasterSpec:
+    """One master port's workload."""
+    model: str                                # key into GENERATORS
+    qos: str = "besteffort"                   # one of QOS_CLASSES
+    rate: float = 1.0                         # injection cap, beats/cycle
+    txns: int = 256                           # transactions to generate
+    region: Optional[Tuple[int, int]] = None  # [lo, hi) beats; None = auto
+    seed: int = 0
+    params: Dict = field(default_factory=dict)
+
+    def validate(self) -> None:
+        if self.model not in GENERATORS:
+            raise ValueError(f"unknown traffic model {self.model!r}; "
+                             f"have {sorted(GENERATORS)}")
+        if self.qos not in QOS_CLASSES:
+            raise ValueError(f"unknown QoS class {self.qos!r}; "
+                             f"have {QOS_CLASSES}")
+        if not 0.0 < self.rate <= 1.0:
+            raise ValueError(f"rate must be in (0, 1]; got {self.rate}")
+        if self.txns <= 0:
+            raise ValueError("txns must be positive")
+        if self.region is not None:
+            lo, hi = self.region
+            if lo < 0 or hi - lo < MIN_REGION_BEATS:
+                raise ValueError(
+                    f"region {self.region} must be >= {MIN_REGION_BEATS} "
+                    "beats wide and non-negative")
+
+
+@dataclass
+class Scenario:
+    """A full machine workload: one MasterSpec per port."""
+    name: str
+    masters: Sequence[MasterSpec]
+    geom: MemoryGeometry = MemoryGeometry()
+    description: str = ""
+
+    def validate(self) -> None:
+        if not self.masters:
+            raise ValueError(f"scenario {self.name!r} has no masters")
+        claimed = []
+        for i, m in enumerate(self.masters):
+            m.validate()
+            if m.region is None:
+                continue
+            if m.region[1] > self.geom.beats_total:
+                raise ValueError(f"region {m.region} exceeds memory "
+                                 f"({self.geom.beats_total} beats)")
+            for j, other in claimed:
+                if m.region[0] < other[1] and other[0] < m.region[1]:
+                    raise ValueError(
+                        f"masters {j} and {i} claim overlapping regions "
+                        f"{other} and {m.region} — the DSL's isolation "
+                        "contract requires disjoint placement")
+            claimed.append((i, m.region))
+
+
+@dataclass
+class CompiledScenario:
+    """A scenario lowered to the simulator's input format."""
+    scenario: Scenario
+    trace: Trace
+    regions: List[Tuple[int, int]]            # resolved [lo, hi) per master
+    qos: List[str]                            # per-master class
+
+    @property
+    def classes(self) -> List[str]:
+        return self.qos
+
+    def masters_of_class(self, cls: str) -> np.ndarray:
+        return np.array([i for i, c in enumerate(self.qos) if c == cls],
+                        np.int32)
+
+
+def resolve_regions(scenario: Scenario) -> List[Tuple[int, int]]:
+    """Explicit regions pass through; unplaced masters equally partition the
+    *largest free gap* left by the explicit claims (so pinning a master high
+    in memory doesn't starve auto placement), and every auto slot must meet
+    the same ``MIN_REGION_BEATS`` floor explicit regions are held to."""
+    total = scenario.geom.beats_total
+    explicit = sorted(m.region for m in scenario.masters
+                      if m.region is not None)
+    auto_count = sum(1 for m in scenario.masters if m.region is None)
+    out: List[Tuple[int, int]] = []
+    if auto_count:
+        gaps, cur = [], 0
+        for lo, hi in explicit:
+            if lo > cur:
+                gaps.append((cur, lo))
+            cur = max(cur, hi)
+        if cur < total:
+            gaps.append((cur, total))
+        if not gaps:
+            raise ValueError("no address space left for auto-placed masters")
+        g_lo, g_hi = max(gaps, key=lambda g: g[1] - g[0])
+        slot = (g_hi - g_lo) // auto_count
+        if slot < MIN_REGION_BEATS:
+            raise ValueError(
+                f"largest free gap ({g_hi - g_lo} beats) cannot fit "
+                f"{auto_count} auto-placed masters of >= {MIN_REGION_BEATS} "
+                "beats each")
+        auto_base = [g_lo + i * slot for i in range(auto_count)]
+    k = 0
+    for m in scenario.masters:
+        if m.region is not None:
+            out.append((int(m.region[0]), int(m.region[1])))
+        else:
+            out.append((auto_base[k], auto_base[k] + slot))
+            k += 1
+    return out
+
+
+def compile_scenario(scenario: Scenario) -> CompiledScenario:
+    """Lower a scenario to a padded, beat-aligned ``Trace``."""
+    scenario.validate()
+    regions = resolve_regions(scenario)
+    rows_iw, rows_b, rows_a, rows_s = [], [], [], []
+    for i, (m, (lo, hi)) in enumerate(zip(scenario.masters, regions)):
+        gen = GENERATORS[m.model]
+        iw, b, a, s = gen(lo, hi, txns=m.txns, rate=m.rate,
+                          seed=m.seed + 7919 * i, params=m.params)
+        rows_iw.append(iw)
+        rows_b.append(b)
+        rows_a.append(a)
+        rows_s.append(s)
+    n = max(len(r) for r in rows_iw)
+    trace = Trace(pad_rows(rows_iw, n), pad_rows(rows_b, n),
+                  pad_rows(rows_a, n), pad_rows(rows_s, n))
+    return CompiledScenario(scenario, trace, regions,
+                            [m.qos for m in scenario.masters])

@@ -9,7 +9,6 @@ sharding trees from ``distributed/sharding.py``.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Dict, Tuple
 
 import jax

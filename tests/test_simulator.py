@@ -2,6 +2,8 @@
 paper's headline numbers at reduced scale."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.address import (MemoryGeometry, fractal_permute,

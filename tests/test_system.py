@@ -1,7 +1,6 @@
 """End-to-end behaviour tests: every assigned architecture runs forward,
 prefill and decode at reduced scale; training reduces the loss; crash-resume
 is exact (deliverables b/c/f)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -55,6 +54,7 @@ def test_crash_resume_exact(tmp_path):
     ck = CheckpointManager(tmp_path / "ck")
     with pytest.raises(RuntimeError):
         train_loop(cfg, run, steps=12, ckpt=ck, fail_at_step=10)
+    ck.wait()   # the accepted async save (step 8) publishes despite the crash
     res = train_loop(cfg, run, steps=12, ckpt=ck)
     assert res.resumed_from == 8
     np.testing.assert_allclose(res.losses[-1], ref.losses[-1], rtol=1e-4)
