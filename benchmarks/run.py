@@ -21,6 +21,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import paper_figures as F
+    from benchmarks.qos_isolation import qos_isolation_sweep
     from benchmarks.scenario_sweep import scenario_sweep
 
     scale = dict(num_txns=1000) if args.full else {}
@@ -39,6 +40,9 @@ def main() -> None:
         ("scenario_sweep", lambda: scenario_sweep(
             txns=128 if args.full else 64,
             max_cycles=16_000 if args.full else 8000)),
+        ("qos_isolation_sweep", lambda: qos_isolation_sweep(
+            txns=96 if args.full else 64,
+            max_cycles=14_000 if args.full else 10_000)),
     ]
     if args.only:
         wanted = args.only.split(",")
@@ -71,6 +75,13 @@ def main() -> None:
     out_path.parent.mkdir(exist_ok=True)
     out_path.write_text(json.dumps(results, indent=1, default=str))
     print(f"# wrote {out_path}")
+
+    # per-class QoS summary as its own artifact file (CI uploads it)
+    if "qos_isolation_sweep" in results:
+        q_path = Path("experiments/qos_isolation_summary.json")
+        q_path.write_text(json.dumps(
+            results["qos_isolation_sweep"]["results"], indent=1, default=str))
+        print(f"# wrote {q_path}")
 
 
 if __name__ == "__main__":

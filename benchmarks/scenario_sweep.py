@@ -23,7 +23,7 @@ from repro.scenarios import SweepPoint, preset_scenarios, run_sweep
 
 def scenario_sweep(*, txns: int = 64, max_cycles: int = 8000,
                    outstanding_grid=(1, 8), verify_points: int = 1) -> Dict:
-    """4 preset scenarios × |outstanding_grid| parameter points, one vmap."""
+    """5 preset scenarios × |outstanding_grid| parameter points, one vmap."""
     points = [SweepPoint(sc, SimParams(outstanding=o, max_cycles=max_cycles))
               for sc in preset_scenarios(txns=txns)
               for o in outstanding_grid]
@@ -54,8 +54,12 @@ def scenario_sweep(*, txns: int = 64, max_cycles: int = 8000,
         assert r.isolation["regions_isolated"], key
     assert mismatches == 0, "batched sweep diverged from sequential"
 
-    safety_p99 = [r.per_class["safety"]["lat_p99"] for r in results
-                  if "safety" in r.per_class]
+    safety_p99 = [max(v for v in (r.per_class["safety"]["read_lat_p99"],
+                                  r.per_class["safety"]["write_lat_p99"])
+                      if not np.isnan(v))
+                  for r in results
+                  if "safety" in r.per_class
+                  and r.per_class["safety"]["txns_done"] > 0]
     return {
         "grid": {
             "points": len(points),

@@ -10,12 +10,13 @@ Two layers of checking:
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict, List, Tuple
 
 import numpy as np
 
 from repro.core.address import MemoryGeometry, flat_bank_id, sub_bank_id
-from repro.core.simulator import SimParams, Trace, simulate
+from repro.core.simulator import SimParams, Trace, simulate_batch
+from repro.core.traffic import stack_traces
 
 
 def touched_subbanks(addr: np.ndarray, burst: np.ndarray,
@@ -33,24 +34,40 @@ def touched_subbanks(addr: np.ndarray, burst: np.ndarray,
     return np.unique(granule)
 
 
+def touched_intervals(addr: np.ndarray, burst: np.ndarray
+                      ) -> List[Tuple[int, int]]:
+    """Sorted, merged [lo, hi) beat intervals a master's trace touches."""
+    ivs = sorted((int(a), int(a) + int(b))
+                 for a, b in zip(addr, burst) if b > 0)
+    merged: List[Tuple[int, int]] = []
+    for lo, hi in ivs:
+        if merged and lo <= merged[-1][1]:
+            merged[-1] = (merged[-1][0], max(merged[-1][1], hi))
+        else:
+            merged.append((lo, hi))
+    return merged
+
+
 def regions_isolated(trace: Trace,
                      geom: MemoryGeometry = MemoryGeometry()) -> bool:
     """True iff no two masters touch the same *address* (the paper's
-    "accessing memory spaces don't have any overlap" requirement)."""
-    seen = {}
+    "accessing memory spaces don't have any overlap" requirement).
+
+    Compares the actual touched beat intervals, not per-master bounding
+    boxes — interleaved-but-disjoint address sets (e.g. two ring buffers
+    sharing a span) are correctly reported as isolated."""
+    tagged = []
     for m in range(trace.num_masters):
-        lo = hi = None
-        for a, b in zip(trace.addr[m], trace.burst[m]):
-            if b <= 0:
-                continue
-            lo = a if lo is None else min(lo, a)
-            hi = a + b if hi is None else max(hi, a + b)
-        if lo is None:
-            continue
-        for m2, (lo2, hi2) in seen.items():
-            if lo < hi2 and lo2 < hi:
-                return False
-        seen[m] = (lo, hi)
+        for lo, hi in touched_intervals(trace.addr[m], trace.burst[m]):
+            tagged.append((lo, hi, m))
+    tagged.sort()
+    # sorted by lo, any overlapping pair involves the running-max interval
+    cur_hi, cur_m = -1, -1
+    for lo, hi, m in tagged:
+        if lo < cur_hi and m != cur_m:
+            return False
+        if hi > cur_hi:
+            cur_hi, cur_m = hi, m
     return True
 
 
@@ -72,14 +89,22 @@ def subbank_isolated(trace: Trace,
 def interference_report(victim_trace: Trace, full_trace: Trace,
                         prm: SimParams = SimParams()) -> Dict[str, float]:
     """Victim-alone vs victim-among-aggressors latency/throughput deltas.
-    ``full_trace`` row 0 must equal the victim's row."""
-    alone = simulate(victim_trace, prm)
-    together = simulate(full_trace, prm)
+    ``full_trace`` row 0 must equal the victim's row.
+
+    Both runs are evaluated as ONE batched (vmapped) scan: the victim trace
+    is padded to the full trace's [X, N] envelope (padding rows are inert)
+    and stacked with it, so a single compiled call yields both points."""
+    pair = stack_traces([victim_trace, full_trace])
+    out = simulate_batch(pair, [prm, prm])
+    alone = {k: np.asarray(v)[0] for k, v in out.items()}
+    together = {k: np.asarray(v)[1] for k, v in out.items()}
     return {
         "alone_read_lat": float(alone["read_lat_avg"][0]),
         "together_read_lat": float(together["read_lat_avg"][0]),
         "read_lat_degradation": float(together["read_lat_avg"][0]
                                       - alone["read_lat_avg"][0]),
+        "alone_read_lat_max": float(alone["read_lat_max"][0]),
+        "together_read_lat_max": float(together["read_lat_max"][0]),
         "alone_tput": float(alone["read_throughput"][0]),
         "together_tput": float(together["read_throughput"][0]),
     }

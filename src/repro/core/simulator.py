@@ -5,8 +5,15 @@ Faithful model of the prototype:
   * two-level split-by-4 dispatch: a burst fans out at 4 beats/cycle (one per
     cluster); beat → (cluster, array, bank) via ``core.address.map_beat``
     (structural round-robin + fractal hash)
-  * per-bank FCFS arbitration with round-robin tie-break among masters;
-    SRAMs at half the fabric clock ⇒ a bank is busy 2 fabric cycles per beat
+  * per-bank QoS-aware arbitration: priority-first (per-master levels carried
+    by ``Trace.prio``, 0 = most critical), FCFS within a level, round-robin
+    tie-break among masters, and an anti-starvation aging bonus that promotes
+    a waiting beat one level every ``qos_aging`` cycles; with all priorities
+    equal (the default) this degrades exactly to the original FCFS+RR
+  * an optional per-port token-bucket regulator that throttles best-effort
+    masters (``Trace.prio >= REGULATED_PRIO``) to ``reg_rate/256`` beats per
+    cycle with a ``reg_burst``-beat burst allowance (``reg_rate=0`` disables)
+  * SRAMs at half the fabric clock ⇒ a bank is busy 2 fabric cycles per beat
   * per-port outstanding-command credits (8 default; Table I sweeps 16/1) and
     a 64-beat split/dispatch buffer providing backpressure
   * read latency is measured from command *acceptance* (credit granted) to the
@@ -49,7 +56,16 @@ INF32 = jnp.int32(2**30)
 #: SimParams fields that enter the scan as traced *values* (per-point in a
 #: batched sweep).  Order defines the layout of the ``dyn`` vector.
 DYN_FIELDS = ("outstanding", "split_buffer", "cmd_latency", "ret_latency",
-              "bank_occupancy", "bank_latency")
+              "bank_occupancy", "bank_latency", "qos_aging", "reg_rate",
+              "reg_burst")
+
+#: distinct QoS priority levels the arbiter keys on (0 = most critical)
+PRIO_LEVELS = 8
+#: masters at this priority level or numerically higher (less critical)
+#: are subject to the regulator
+REGULATED_PRIO = 2
+#: fixed-point scale of the regulator token bucket (tokens per beat)
+REG_SCALE = 256
 
 
 @dataclass(frozen=True)
@@ -61,6 +77,11 @@ class SimParams:
     ret_latency: int = 9         # bank -> port pipeline
     bank_occupancy: int = 2      # SRAM at 500 MHz vs 1 GHz fabric
     bank_latency: int = 2       # access latency before data heads back
+    qos_aging: int = 128         # cycles of waiting per priority-level boost
+                                 # (anti-starvation; 0 = pure priority)
+    reg_rate: int = 0            # regulator refill, 1/256 beats per cycle
+                                 # (0 = regulator off; 256 = 1 beat/cycle)
+    reg_burst: int = 16          # regulator bucket depth, beats
     expand_rate: int = 4         # split-by-4: beats entering fabric per cycle
     max_burst: int = 16
     banking: str = "paper"       # paper | linear | no_fractal
@@ -114,11 +135,18 @@ class Trace:
     transaction may be *offered* at its port — the injection-timing hook used
     by the scenario engine.  ``None`` means every transaction is ready at
     cycle 0 (the original back-to-back behaviour, bit-for-bit).
+
+    ``prio`` (optional, [X] int32) is the per-master QoS priority level
+    (0 = most critical, up to ``PRIO_LEVELS - 1``); the scenario engine
+    derives it from the QoS class.  ``None`` means every master is level 0,
+    which makes the arbiter behave exactly like the original QoS-blind
+    FCFS+RR and exempts every port from the regulator.
     """
     is_write: np.ndarray
     burst: np.ndarray
     addr: np.ndarray
     start: Optional[np.ndarray] = None
+    prio: Optional[np.ndarray] = None
 
     @property
     def num_masters(self) -> int:
@@ -132,6 +160,11 @@ class Trace:
         if self.start is None:
             return np.zeros_like(np.asarray(self.is_write, np.int32))
         return np.asarray(self.start, np.int32)
+
+    def prio_or_zeros(self) -> np.ndarray:
+        if self.prio is None:
+            return np.zeros((self.num_masters,), np.int32)
+        return np.asarray(self.prio, np.int32)
 
 
 def _precompute_beats(trace: Trace, prm: SimParams):
@@ -156,6 +189,7 @@ def simulate(trace: Trace, prm: SimParams = SimParams()) -> Dict[str, np.ndarray
              jnp.asarray(trace.burst, jnp.int32),
              jnp.asarray(banks_np),
              jnp.asarray(trace.start_or_zeros()),
+             jnp.asarray(trace.prio_or_zeros()),
              jnp.asarray(prm.dyn_vector()))
     return jax.tree_util.tree_map(np.asarray, out)
 
@@ -199,10 +233,11 @@ def simulate_batch(traces: Sequence[Trace],
     iw = np.stack([np.asarray(t.is_write, np.int32) for t in traces])
     b = np.stack([np.asarray(t.burst, np.int32) for t in traces])
     st = np.stack([t.start_or_zeros() for t in traces])
+    pr = np.stack([t.prio_or_zeros() for t in traces])
     dyn = np.stack([p.dyn_vector() for p in prms])
     fn = _batch_jitted(env)
     out = fn(jnp.asarray(iw), jnp.asarray(b), jnp.asarray(banks),
-             jnp.asarray(st), jnp.asarray(dyn))
+             jnp.asarray(st), jnp.asarray(pr), jnp.asarray(dyn))
     return jax.tree_util.tree_map(np.asarray, out)
 
 
@@ -233,17 +268,34 @@ def _batch_jitted_cached(prm: SimParams):
     return jax.jit(jax.vmap(partial(_core, prm=prm)))
 
 
-def _core(tx_write, tx_burst, tx_banks, tx_start, dyn, *, prm: SimParams):
+def _age_cap(prm: SimParams, num_masters: int) -> int:
+    """Static saturation point of the FCFS age term: the next power of two
+    above ``max_cycles`` (so the FCFS key cannot saturate within a run),
+    clamped so the packed (level, age, round-robin) arbitration key stays
+    strictly below the int32 ineligible-filler (2**30)."""
+    cap = 1 << int(np.ceil(np.log2(max(prm.max_cycles + 1, 256))))
+    budget = (2**30 - 1) // (PRIO_LEVELS * max(num_masters, 1)) - 1
+    return int(min(cap - 1, budget))
+
+
+def _core(tx_write, tx_burst, tx_banks, tx_start, tx_prio, dyn, *,
+          prm: SimParams):
     X, N = tx_write.shape
     P = prm.slots_per_master
     S = X * P
     NB = prm.geom.num_banks
+    AGE_CAP = _age_cap(prm, X)
 
     master_of_slot = jnp.repeat(jnp.arange(X, dtype=jnp.int32), P)
 
     dyn = jnp.asarray(dyn, jnp.int32)
     d_outstanding, d_split_buffer, d_cmd_lat, d_ret_lat, d_bank_occ, \
-        d_bank_lat = (dyn[i] for i in range(len(DYN_FIELDS)))
+        d_bank_lat, d_qos_aging, d_reg_rate, d_reg_burst = \
+        (dyn[i] for i in range(len(DYN_FIELDS)))
+
+    tx_prio = jnp.clip(jnp.asarray(tx_prio, jnp.int32), 0, PRIO_LEVELS - 1)
+    slot_prio = tx_prio[master_of_slot]                      # [S]
+    regulated = tx_prio >= REGULATED_PRIO                    # [X]
 
     state = dict(
         now=jnp.int32(0),
@@ -252,6 +304,10 @@ def _core(tx_write, tx_burst, tx_banks, tx_start, dyn, *, prm: SimParams):
         credits=jnp.zeros((X, 2), jnp.int32) + d_split_buffer,
         beats_issued=jnp.zeros((X,), jnp.int32),
         fwd_free=jnp.zeros((X,), jnp.int32),       # W-channel data-bus free time
+        reg_tokens=jnp.zeros((X,), jnp.int32) + d_reg_burst * REG_SCALE,
+        busy_r=jnp.zeros((X,), jnp.int32),         # cycles with a read in flight
+        busy_w=jnp.zeros((X,), jnp.int32),
+        busy_any=jnp.zeros((X,), jnp.int32),
         # beat slots (ring per master, flattened [S])
         sl_busy=jnp.zeros((S,), jnp.int32),
         sl_bank=jnp.zeros((S,), jnp.int32),
@@ -279,10 +335,22 @@ def _core(tx_write, tx_burst, tx_banks, tx_start, dyn, *, prm: SimParams):
         is_w = tx_write[jnp.arange(X), nt_c]
         ready = tx_start[jnp.arange(X), nt_c] <= now
         dirn = is_w  # 0 = read, 1 = write (AXI channels are independent)
+        # token-bucket regulator: a best-effort port must hold tokens for the
+        # whole burst — or a full bucket when the burst exceeds the bucket
+        # depth, in which case the balance goes negative (debt) and the port
+        # stalls until refill repays it, so a burst > reg_burst is delayed,
+        # never deadlocked, and the sustained rate cap still holds
+        reg_gate = regulated & (d_reg_rate > 0)
+        reg_tokens = jnp.minimum(st["reg_tokens"] + d_reg_rate,
+                                 d_reg_burst * REG_SCALE)
+        reg_need = jnp.minimum(burst, d_reg_burst) * REG_SCALE
         can = (has_txn & (burst > 0) & ready
                & (st["outstanding"][jnp.arange(X), dirn] < d_outstanding)
                & (st["credits"][jnp.arange(X), dirn] >= burst)
-               & ((is_w == 0) | (st["fwd_free"] <= now)))
+               & ((is_w == 0) | (st["fwd_free"] <= now))
+               & (~reg_gate | (reg_tokens >= reg_need)))
+        reg_tokens = reg_tokens - jnp.where(can & reg_gate,
+                                            burst * REG_SCALE, 0)
         # beat arrival times: reads expand 4/cycle at the splitter; write data
         # is paced by the 1-beat/cycle port bus
         offs = jnp.arange(prm.max_burst, dtype=jnp.int32)
@@ -318,12 +386,19 @@ def _core(tx_write, tx_burst, tx_banks, tx_start, dyn, *, prm: SimParams):
         fwd_free = jnp.where(can & (is_w > 0), now + burst, st["fwd_free"])
 
         # ---- 2. per-bank arbitration (one grant per bank per cycle) ----
+        # priority level first (aging promotes a waiting beat one level per
+        # ``qos_aging`` cycles so best-effort can never starve), FCFS within
+        # a level (AGE_CAP >= max_cycles: the age term cannot saturate within
+        # a run), round-robin among masters as the tie-break
         waiting = (sl_busy == 1) & (sl_arrive <= now)
         bank_ok = st["bank_free"][sl_bank] <= now
         elig = waiting & bank_ok
-        age = jnp.clip(now - sl_arrive, 0, 255)
+        age = jnp.clip(now - sl_arrive, 0, AGE_CAP)
+        boost = jnp.where(d_qos_aging > 0,
+                          age // jnp.maximum(d_qos_aging, 1), 0)
+        level = jnp.clip(slot_prio - boost, 0, PRIO_LEVELS - 1)
         prio = (master_of_slot - st["bank_rr"][sl_bank]) % X
-        key = ((255 - age) * X + prio) * 1                      # FCFS then RR
+        key = (level * (AGE_CAP + 1) + (AGE_CAP - age)) * X + prio
         seg = jnp.where(elig, sl_bank, NB)
         best = jax.ops.segment_min(jnp.where(elig, key, 2**30), seg,
                                    num_segments=NB + 1)[:-1]    # [NB]
@@ -384,9 +459,19 @@ def _core(tx_write, tx_burst, tx_banks, tx_start, dyn, *, prm: SimParams):
         done_w = jnp.sum(just_done & (tx_write == 1), axis=1)
         outstanding = outstanding.at[:, 0].add(-done_r).at[:, 1].add(-done_w)
 
+        # busy-cycle accounting: a port is busy while it has any accepted-
+        # but-incomplete transaction on that AXI channel
+        in_r = (outstanding[:, 0] > 0).astype(jnp.int32)
+        in_w = (outstanding[:, 1] > 0).astype(jnp.int32)
+        busy_r = st["busy_r"] + in_r
+        busy_w = st["busy_w"] + in_w
+        busy_any = st["busy_any"] + jnp.maximum(in_r, in_w)
+
         new_st = dict(st, now=now + 1, next_txn=next_txn,
                       outstanding=outstanding, credits=credits,
                       beats_issued=beats_issued, fwd_free=fwd_free,
+                      reg_tokens=reg_tokens, busy_r=busy_r, busy_w=busy_w,
+                      busy_any=busy_any,
                       sl_busy=sl_busy, sl_bank=sl_bank, sl_arrive=sl_arrive,
                       sl_ready=sl_ready, sl_txn=sl_txn, sl_write=sl_write,
                       bank_free=bank_free, bank_rr=bank_rr,
@@ -409,7 +494,12 @@ def _metrics(st, burst, is_w, prm: SimParams) -> Dict[str, jnp.ndarray]:
     n_r = jnp.maximum(jnp.sum(r, axis=1), 1)
     n_w = jnp.maximum(jnp.sum(w, axis=1), 1)
     # per-direction port throughput: beats delivered per active cycle on that
-    # AXI channel (R return bus / W data bus are independent, 1 beat/cycle)
+    # AXI channel (R return bus / W data bus are independent, 1 beat/cycle).
+    # The wall-span view divides by last_complete - first_accept, which an
+    # injection-gated trace (camera vblank, Radar PRI idle gaps) deflates;
+    # the ``*_busy`` view divides by busy cycles only — cycles with any
+    # accepted-but-incomplete transaction on that channel — and reads as
+    # achieved service rate regardless of the offered duty cycle.
     def tput(sel):
         first = jnp.min(jnp.where(sel, st["accept_cycle"], INF32), axis=1)
         last = jnp.max(jnp.where(sel, st["complete_cycle"], -1), axis=1)
@@ -417,10 +507,19 @@ def _metrics(st, burst, is_w, prm: SimParams) -> Dict[str, jnp.ndarray]:
         span = jnp.maximum(last - first, 1).astype(jnp.float32)
         return jnp.where(jnp.sum(sel, 1) > 0, beats / span, 0.0)
 
+    def tput_busy(sel, busy):
+        beats = jnp.sum(jnp.where(sel, burst, 0), axis=1)
+        cyc = jnp.maximum(busy, 1).astype(jnp.float32)
+        return jnp.where(jnp.sum(sel, 1) > 0, beats / cyc, 0.0)
+
     return {
         "throughput": tput(real & done),
         "read_throughput": tput(r),
         "write_throughput": tput(w),
+        "throughput_busy": tput_busy(real & done, st["busy_any"]),
+        "read_throughput_busy": tput_busy(r, st["busy_r"]),
+        "write_throughput_busy": tput_busy(w, st["busy_w"]),
+        "busy_cycles": st["busy_any"],
         "read_lat_avg": jnp.where(jnp.sum(r, 1) > 0,
                                   jnp.sum(read_lat, 1) / n_r, 0.0),
         "read_lat_max": jnp.max(jnp.where(r, lat, 0.0), axis=1),

@@ -45,8 +45,12 @@ def pad_trace(trace: Trace, num_masters: int, num_txns: int) -> Trace:
         return out
 
     start = None if trace.start is None else grow(trace.start)
+    prio = None
+    if trace.prio is not None:    # padding masters never issue; level 0 inert
+        prio = np.zeros((num_masters,), np.int32)
+        prio[:X] = np.asarray(trace.prio, np.int32)
     return Trace(grow(trace.is_write), grow(trace.burst), grow(trace.addr),
-                 start)
+                 start, prio)
 
 
 def stack_traces(traces: Sequence[Trace]) -> List[Trace]:

@@ -7,17 +7,18 @@ compiles down to the simulator's ``Trace`` format.  ``scenarios.sweep`` runs a
 grid of scenario × parameter points as one compiled ``vmap``-ed scan.
 """
 from repro.scenarios.spec import (CompiledScenario, MasterSpec, Scenario,
-                                  QOS_CLASSES, compile_scenario)
+                                  QOS_CLASSES, QOS_PRIORITY, compile_scenario)
 from repro.scenarios.generators import GENERATORS
 from repro.scenarios.library import (highway_pilot, parking_surround,
-                                     preset_scenarios, sensor_stress,
-                                     urban_perception)
+                                     preset_scenarios, qos_isolation,
+                                     sensor_stress, urban_perception)
 from repro.scenarios.sweep import (SweepPoint, SweepResult, run_sweep,
                                    summarize_point)
 
 __all__ = [
     "CompiledScenario", "MasterSpec", "Scenario", "QOS_CLASSES",
-    "compile_scenario", "GENERATORS", "SweepPoint", "SweepResult",
-    "run_sweep", "summarize_point", "highway_pilot", "parking_surround",
-    "preset_scenarios", "sensor_stress", "urban_perception",
+    "QOS_PRIORITY", "compile_scenario", "GENERATORS", "SweepPoint",
+    "SweepResult", "run_sweep", "summarize_point", "highway_pilot",
+    "parking_surround", "preset_scenarios", "qos_isolation", "sensor_stress",
+    "urban_perception",
 ]

@@ -49,8 +49,12 @@ def camera_frame_dma(lo: int, hi: int, *, txns: int, rate: float,
     readback = bool(params.get("readback", False))      # ISP reads prev frame
     chunks = max(line_beats // 16, 1)
     frame_beats = lines * chunks * 16
+    # readback beats occupy the same DMA port clock as the writes, so they
+    # count toward the frame's active time (and the vblank period below)
+    readback_beats = ((lines + 1) // 2) * 16 if readback else 0
     # vblank period: active beats / rate (duty cycle = rate)
-    period = int(np.ceil(frame_beats / min(max(rate, 1e-6), 1.0)))
+    period = int(np.ceil((frame_beats + readback_beats)
+                         / min(max(rate, 1e-6), 1.0)))
     # sensors free-run: each camera's vblank has its own phase
     phase = int(np.random.default_rng(seed).integers(0, max(period // 2, 1)))
     buf_beats = min((hi - lo) // 2, frame_beats + 64)
@@ -73,6 +77,7 @@ def camera_frame_dma(lo: int, hi: int, *, txns: int, rate: float,
                 b.append(16)
                 a.append(other + (ln * line_beats) % max(buf_beats - 16, 1))
                 s.append(t0 + beat)
+                beat += 16            # readback occupies the DMA clock too
         f += 1
     return _finalize(iw, b, a, s, lo, hi, txns)
 

@@ -67,7 +67,36 @@ def sensor_stress(txns: int = 256, geom: MemoryGeometry = MemoryGeometry()
                     "all 16 ports saturated, every traffic model")
 
 
+def qos_isolation(txns: int = 256, geom: MemoryGeometry = MemoryGeometry(),
+                  aggressors: int = 13) -> Scenario:
+    """QoS isolation showcase: a deadline-carrying safety pair (braking-path
+    Radar) and one realtime NPU against a wall of full-rate best-effort
+    aggressors filling the remaining ports.  With the priority arbiter +
+    regulator the safety class's p99 latency stays pinned near its
+    alone-latency even when banks are slow enough to congest; with a
+    QoS-blind arbiter the aggressors drag it out
+    (see ``benchmarks/qos_isolation.py``)."""
+    n_npu = aggressors // 3
+    n_lidar = aggressors // 3
+    n_cpu = aggressors - n_npu - n_lidar
+    masters = (
+        [MasterSpec("radar", qos="safety", rate=0.9, txns=txns, seed=s,
+                    deadline=4096) for s in range(2)] +
+        [MasterSpec("npu", qos="realtime", rate=0.9, txns=txns, seed=5)] +
+        [MasterSpec("npu", qos="besteffort", rate=1.0, txns=txns, seed=20 + s)
+         for s in range(n_npu)] +
+        [MasterSpec("lidar", qos="besteffort", rate=1.0, txns=txns,
+                    seed=40 + s) for s in range(n_lidar)] +
+        [MasterSpec("cpu", qos="besteffort", rate=1.0, txns=txns, seed=60 + s)
+         for s in range(n_cpu)]
+    )
+    return Scenario("qos_isolation", masters, geom,
+                    f"2 safety Radar + 1 realtime NPU vs {aggressors} "
+                    "saturating best-effort aggressors")
+
+
 def preset_scenarios(txns: int = 256):
     """All presets, for sweeps and benchmarks."""
     return [urban_perception(txns), highway_pilot(txns),
-            parking_surround(txns), sensor_stress(txns)]
+            parking_surround(txns), sensor_stress(txns),
+            qos_isolation(txns)]

@@ -22,11 +22,15 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.address import MemoryGeometry
-from repro.core.simulator import Trace
+from repro.core.simulator import PRIO_LEVELS, Trace
 from repro.core.traffic import pad_rows
 from repro.scenarios.generators import GENERATORS
 
 QOS_CLASSES = ("safety", "realtime", "besteffort")
+
+#: arbitration priority level per QoS class (0 = most critical; masters at
+#: level >= REGULATED_PRIO are subject to the token-bucket regulator)
+QOS_PRIORITY = {"safety": 0, "realtime": 1, "besteffort": 2}
 
 #: smallest region (beats) the traffic models can lay out sensibly: double
 #: buffers, weight/output sub-regions, and ring buffers all need headroom
@@ -43,6 +47,15 @@ class MasterSpec:
     region: Optional[Tuple[int, int]] = None  # [lo, hi) beats; None = auto
     seed: int = 0
     params: Dict = field(default_factory=dict)
+    priority: Optional[int] = None            # arbiter level; None = from qos
+    deadline: Optional[int] = None            # per-txn completion bound
+                                              # (cycles past its start time)
+
+    def effective_priority(self) -> int:
+        """Arbitration level this master presents to the simulator."""
+        if self.priority is not None:
+            return int(self.priority)
+        return QOS_PRIORITY[self.qos]
 
     def validate(self) -> None:
         if self.model not in GENERATORS:
@@ -55,6 +68,12 @@ class MasterSpec:
             raise ValueError(f"rate must be in (0, 1]; got {self.rate}")
         if self.txns <= 0:
             raise ValueError("txns must be positive")
+        if self.priority is not None and \
+                not 0 <= self.priority < PRIO_LEVELS:
+            raise ValueError(f"priority must be in [0, {PRIO_LEVELS}); "
+                             f"got {self.priority}")
+        if self.deadline is not None and self.deadline <= 0:
+            raise ValueError(f"deadline must be positive; got {self.deadline}")
         if self.region is not None:
             lo, hi = self.region
             if lo < 0 or hi - lo < MIN_REGION_BEATS:
@@ -98,6 +117,8 @@ class CompiledScenario:
     trace: Trace
     regions: List[Tuple[int, int]]            # resolved [lo, hi) per master
     qos: List[str]                            # per-master class
+    priorities: Optional[List[int]] = None    # per-master arbiter level
+    deadlines: Optional[List[Optional[int]]] = None  # per-master, cycles
 
     @property
     def classes(self) -> List[str]:
@@ -160,7 +181,10 @@ def compile_scenario(scenario: Scenario) -> CompiledScenario:
         rows_a.append(a)
         rows_s.append(s)
     n = max(len(r) for r in rows_iw)
+    prios = [m.effective_priority() for m in scenario.masters]
     trace = Trace(pad_rows(rows_iw, n), pad_rows(rows_b, n),
-                  pad_rows(rows_a, n), pad_rows(rows_s, n))
+                  pad_rows(rows_a, n), pad_rows(rows_s, n),
+                  np.asarray(prios, np.int32))
     return CompiledScenario(scenario, trace, regions,
-                            [m.qos for m in scenario.masters])
+                            [m.qos for m in scenario.masters], prios,
+                            [m.deadline for m in scenario.masters])

@@ -55,29 +55,66 @@ class SweepResult:
 
 def _class_stats(compiled: CompiledScenario,
                  metrics: Dict[str, np.ndarray]) -> Dict[str, Dict[str, float]]:
-    """Latency percentiles + throughput per QoS class, from per-txn cycles."""
+    """Latency percentiles + throughput per QoS class, from per-txn cycles.
+
+    Read and write completions have different semantics (a write completes at
+    the grant of its last beat, a read at its last return-bus beat), so their
+    percentiles are reported separately; per-direction throughput averages
+    only over masters that actually issued that direction, so a write-only
+    camera cannot drag a class's read throughput toward zero.  Masters that
+    declare a ``deadline`` get per-class miss accounting: a transaction
+    misses when it never completes or completes more than ``deadline``
+    cycles after its earliest-issue (``start``) time."""
     trace = compiled.trace
     acc = np.asarray(metrics["accept_cycle"])
     com = np.asarray(metrics["complete_cycle"])
+    iw = np.asarray(trace.is_write)
+    start = trace.start_or_zeros()
     real = np.asarray(trace.burst) > 0
     done = (com >= 0) & (acc >= 0) & real
     lat = (com - acc).astype(np.float64)
+    X = trace.num_masters
+    deadlines = compiled.deadlines or [None] * X
+    dl = np.array([-1 if d is None else int(d) for d in deadlines])
+    r_tput = np.asarray(metrics["read_throughput"])
+    w_tput = np.asarray(metrics["write_throughput"])
+
+    def pctl_block(stats, prefix, sel):
+        vals = lat[sel]
+        for p in PERCENTILES:
+            stats[f"{prefix}_lat_p{p}"] = (
+                float(np.percentile(vals, p)) if vals.size else float("nan"))
+        stats[f"{prefix}_lat_max"] = (
+            float(vals.max()) if vals.size else float("nan"))
+
     out: Dict[str, Dict[str, float]] = {}
     for cls in sorted(set(compiled.qos)):
         rows = compiled.masters_of_class(cls)
-        sel = done[rows]
-        vals = lat[rows][sel]
+        sel = np.zeros_like(done)
+        sel[rows] = done[rows]
         stats: Dict[str, float] = {
             "masters": int(len(rows)),
             "txns_done": int(sel.sum()),
             "txns_total": int(real[rows].sum()),
-            "read_tput": float(np.asarray(
-                metrics["read_throughput"])[rows].mean()),
         }
-        for p in PERCENTILES:
-            stats[f"lat_p{p}"] = (
-                float(np.percentile(vals, p)) if vals.size else float("nan"))
-        stats["lat_max"] = float(vals.max()) if vals.size else float("nan")
+        has_r = (real[rows] & (iw[rows] == 0)).any(axis=1)
+        has_w = (real[rows] & (iw[rows] == 1)).any(axis=1)
+        stats["read_tput"] = (float(r_tput[rows][has_r].mean())
+                              if has_r.any() else float("nan"))
+        stats["write_tput"] = (float(w_tput[rows][has_w].mean())
+                               if has_w.any() else float("nan"))
+        pctl_block(stats, "read", sel & (iw == 0))
+        pctl_block(stats, "write", sel & (iw == 1))
+        rows_dl = rows[dl[rows] >= 0]
+        considered = real[rows_dl]
+        missed = considered & (~done[rows_dl]
+                               | (com[rows_dl] - start[rows_dl]
+                                  > dl[rows_dl][:, None]))
+        stats["deadline_txns"] = int(considered.sum())
+        stats["deadline_misses"] = int(missed.sum())
+        stats["deadline_miss_rate"] = (
+            float(missed.sum() / considered.sum())
+            if considered.sum() else float("nan"))
         out[cls] = stats
     return out
 
@@ -143,6 +180,7 @@ def run_sweep(points: Sequence[SweepPoint], *,
         # class stats index by the ORIGINAL master rows; padding rows are
         # inert (burst 0) and the padded trace preserves row order
         comp_for_stats = CompiledScenario(comp.scenario, pad, comp.regions,
-                                          comp.qos)
+                                          comp.qos, comp.priorities,
+                                          comp.deadlines)
         out.append(summarize_point(comp_for_stats, prm, met))
     return out
