@@ -18,11 +18,14 @@ def main() -> None:
                     help="paper-scale transaction counts (slow on 1 CPU)")
     ap.add_argument("--only", default=None,
                     help="comma-separated job names to run")
+    ap.add_argument("--list", action="store_true",
+                    help="print the available job names and exit")
     args = ap.parse_args()
 
     from benchmarks import paper_figures as F
     from benchmarks.qos_isolation import qos_isolation_sweep
     from benchmarks.scenario_sweep import scenario_sweep
+    from benchmarks.slice_scaling import slice_scaling_bench
 
     scale = dict(num_txns=1000) if args.full else {}
     jobs = [
@@ -43,12 +46,21 @@ def main() -> None:
         ("qos_isolation_sweep", lambda: qos_isolation_sweep(
             txns=96 if args.full else 64,
             max_cycles=14_000 if args.full else 10_000)),
+        ("slice_scaling", lambda: slice_scaling_bench(
+            txns=96 if args.full else 64,
+            max_cycles=12_000 if args.full else 10_000)),
     ]
+    valid = [j[0] for j in jobs]
+    if args.list:
+        print("\n".join(valid))
+        return
     if args.only:
         wanted = args.only.split(",")
-        unknown = set(wanted) - {j[0] for j in jobs}
+        unknown = set(wanted) - set(valid)
         if unknown:
-            raise SystemExit(f"unknown --only jobs: {sorted(unknown)}")
+            raise SystemExit(
+                f"unknown --only jobs: {sorted(unknown)}; "
+                f"valid jobs: {valid} (see also --list)")
         jobs = [j for j in jobs if j[0] in wanted]
 
     results = {}
@@ -82,6 +94,13 @@ def main() -> None:
         q_path.write_text(json.dumps(
             results["qos_isolation_sweep"]["results"], indent=1, default=str))
         print(f"# wrote {q_path}")
+
+    # multi-slice scaling summary, likewise uploaded by CI
+    if "slice_scaling" in results:
+        s_path = Path("experiments/slice_scaling_summary.json")
+        s_path.write_text(json.dumps(
+            results["slice_scaling"]["results"], indent=1, default=str))
+        print(f"# wrote {s_path}")
 
 
 if __name__ == "__main__":

@@ -3,8 +3,9 @@
 Faithful model of the prototype:
   * X master ports, 256-bit (1 beat/cycle) read-return and write-data buses
   * two-level split-by-4 dispatch: a burst fans out at 4 beats/cycle (one per
-    cluster); beat → (cluster, array, bank) via ``core.address.map_beat``
-    (structural round-robin + fractal hash)
+    cluster); beat → (slice, cluster, array, bank) via ``core.address``
+    (slice select above the cluster split, then structural round-robin +
+    fractal hash)
   * per-bank QoS-aware arbitration: priority-first (per-master levels carried
     by ``Trace.prio``, 0 = most critical), FCFS within a level, round-robin
     tie-break among masters, and an anti-starvation aging bonus that promotes
@@ -20,13 +21,36 @@ Faithful model of the prototype:
     cycle the last beat leaves the return bus — the AXI-observable latency the
     paper reports; AXI5 read-data chunking ⇒ beats may return out of order.
 
+Multi-slice fabric (§IV scalability/modularity): ``geom.num_slices`` tiles S
+identical memory instances behind an inter-slice router.  Each master port
+attaches to a home slice (``core.address.master_home_slices``); a beat whose
+target bank lives in a remote slice pays ``hop_latency`` fabric cycles per
+ring hop on the command path and again on the read-return path, and its whole
+burst must win per-destination-slice ingress credits (``slice_ingress``
+outstanding remote beats per slice, 0 = uncapped) before the port may accept
+the command — the router's backpressure.  With ``num_slices=1`` every beat is
+local, no credit is ever consumed, and results are bit-for-bit identical to
+the single-slice simulator (pinned by the golden regression test).
+
+The cycle body is decomposed into composable stage functions, evaluated in
+fabric order each cycle:
+
+  ``_stage_accept``         acceptance: credits, regulator, router admission
+  ``_stage_dispatch``       split-by-4 dispatch into beat slots (+hop delay)
+  ``_stage_bank_arbitrate`` per-bank QoS arbitration, one grant per bank
+  ``_stage_router_release`` ingress-credit release + per-slice accounting
+  ``_stage_return_bus``     read-return bus, one beat per port per cycle
+  ``_stage_retire``         transaction completion + busy-cycle accounting
+
 Everything is a fixed-size jnp array and one ``lax.scan`` over cycles, so a
 whole sweep runs as a single vmapped scan: :func:`simulate_batch` evaluates a
 stack of (trace, dynamic-parameter) points in one compiled ``vmap``-of-``scan``
-call.  Parameters that only appear as *values* in the dataflow (outstanding
-credits, buffer depth, pipeline latencies, bank occupancy) are passed as a
-traced ``dyn`` vector so they can differ per point; parameters that shape the
-program (geometry, banking, burst ceiling, cycle count) stay static.
+call, and shards the batch axis across devices when more than one is visible
+(see :func:`batch_sharding`).  Parameters that only appear as *values* in the
+dataflow (outstanding credits, buffer depth, pipeline latencies, bank
+occupancy, hop latency, ingress credits) are passed as a traced ``dyn`` vector
+so they can differ per point; parameters that shape the program (geometry,
+banking, burst ceiling, cycle count) stay static.
 
 Traces may carry per-transaction earliest-issue times (``Trace.start``), which
 gates command acceptance — this is how the scenario engine expresses injection
@@ -49,7 +73,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.address import MemoryGeometry, flat_bank_id
+from repro.core.address import (MemoryGeometry, flat_bank_id,
+                                master_home_slices, slice_of_bank,
+                                slice_of_beat)
 
 INF32 = jnp.int32(2**30)
 
@@ -57,7 +83,7 @@ INF32 = jnp.int32(2**30)
 #: batched sweep).  Order defines the layout of the ``dyn`` vector.
 DYN_FIELDS = ("outstanding", "split_buffer", "cmd_latency", "ret_latency",
               "bank_occupancy", "bank_latency", "qos_aging", "reg_rate",
-              "reg_burst")
+              "reg_burst", "hop_latency", "slice_ingress")
 
 #: distinct QoS priority levels the arbiter keys on (0 = most critical)
 PRIO_LEVELS = 8
@@ -82,6 +108,10 @@ class SimParams:
     reg_rate: int = 0            # regulator refill, 1/256 beats per cycle
                                  # (0 = regulator off; 256 = 1 beat/cycle)
     reg_burst: int = 16          # regulator bucket depth, beats
+    hop_latency: int = 6         # inter-slice router, cycles per ring hop
+                                 # (charged on command AND read-return paths)
+    slice_ingress: int = 0       # remote beats in flight per destination
+                                 # slice (router backpressure; 0 = uncapped)
     expand_rate: int = 4         # split-by-4: beats entering fabric per cycle
     max_burst: int = 16
     banking: str = "paper"       # paper | linear | no_fractal
@@ -110,16 +140,19 @@ def bank_of(addr, prm: SimParams):
     g = prm.geom
     if prm.banking == "paper":
         return flat_bank_id(addr, g)
-    a = np.asarray(addr).astype(np.int64)
     if prm.banking == "linear":
+        a = np.asarray(addr).astype(np.int64)
         region = g.beats_total // g.num_banks
         return np.clip(a // region, 0, g.num_banks - 1).astype(np.int32)
     if prm.banking == "no_fractal":  # structural split only, no hash
+        sl, local = slice_of_beat(addr, g)
+        a = np.asarray(local).astype(np.int64)
         c = a % g.num_clusters
         arr = (a // g.num_clusters) % g.arrays_per_cluster
         bank = (a // (g.num_clusters * g.arrays_per_cluster)) % g.banks_per_array
-        return ((c * g.arrays_per_cluster + arr) * g.banks_per_array
-                + bank).astype(np.int32)
+        flat = ((c * g.arrays_per_cluster + arr) * g.banks_per_array + bank)
+        return (np.asarray(sl).astype(np.int64) * g.banks_per_slice
+                + flat).astype(np.int32)
     raise ValueError(prm.banking)
 
 
@@ -168,13 +201,42 @@ class Trace:
 
 
 def _precompute_beats(trace: Trace, prm: SimParams):
-    """[X, N, max_burst] per-beat bank ids + valid mask (static, numpy)."""
+    """Static per-beat routing info (numpy): global bank ids, valid mask,
+    inter-slice hop counts, and per-transaction ingress-credit needs
+    ([X, N, num_slices] remote beats per destination slice).
+
+    Hops and ingress needs derive from the *bank's* slice (``bank_id //
+    banks_per_slice``) — the slice whose ingress the beat actually enters —
+    so the router's credit consumption, release, and per-slice counters stay
+    consistent under every banking comparator (with ``banking="paper"`` this
+    equals ``slice_of_beat``'s slice by construction)."""
+    g = prm.geom
     X, N = trace.addr.shape
     off = np.arange(prm.max_burst)[None, None, :]
     beat_addr = trace.addr[..., None] + off
-    banks = bank_of(beat_addr.reshape(-1), prm).reshape(X, N, prm.max_burst)
     valid = off < trace.burst[..., None]
-    return banks.astype(np.int32), valid
+    # loud domain check: an out-of-range beat would map to a phantom slice/
+    # bank the scan's segment ops silently drop (the transaction would never
+    # complete and the run would spin to max_cycles)
+    oob = valid & ((beat_addr < 0) | (beat_addr >= g.beats_total))
+    if oob.any():
+        bad = np.argwhere(oob)[0]
+        raise ValueError(
+            f"trace addresses out of range: master {bad[0]} txn {bad[1]} "
+            f"touches beat {int(beat_addr[tuple(bad)])} but the fabric has "
+            f"{g.beats_total} beats ({g.num_slices} slice(s))")
+    flat = beat_addr.reshape(-1)
+    banks = bank_of(flat, prm).reshape(X, N, prm.max_burst)
+    home = master_home_slices(X, g)                           # [X]
+    tgt = slice_of_bank(banks, g)                             # [X, N, mb]
+    d = np.abs(tgt - home[:, None, None])
+    hops = np.minimum(d, g.num_slices - d)                    # ring distance
+    hops = np.where(valid, hops, 0).astype(np.int32)
+    remote = valid & (hops > 0)
+    ingress = np.stack([(remote & (tgt == s)).sum(axis=-1)
+                        for s in range(g.num_slices)], axis=-1)
+    return (banks.astype(np.int32), valid, hops,
+            ingress.astype(np.int32))
 
 
 # ---------------------------------------------------------------------------
@@ -183,11 +245,13 @@ def _precompute_beats(trace: Trace, prm: SimParams):
 
 def simulate(trace: Trace, prm: SimParams = SimParams()) -> Dict[str, np.ndarray]:
     """Run the sim; returns per-port and per-txn statistics (numpy)."""
-    banks_np, _ = _precompute_beats(trace, prm)
+    banks_np, _, hops_np, ing_np = _precompute_beats(trace, prm)
     fn = _core_jitted(prm)
     out = fn(jnp.asarray(trace.is_write, jnp.int32),
              jnp.asarray(trace.burst, jnp.int32),
              jnp.asarray(banks_np),
+             jnp.asarray(hops_np),
+             jnp.asarray(ing_np),
              jnp.asarray(trace.start_or_zeros()),
              jnp.asarray(trace.prio_or_zeros()),
              jnp.asarray(prm.dyn_vector()))
@@ -210,8 +274,22 @@ def batch_envelope(prms: Sequence[SimParams]) -> SimParams:
     return dataclasses_replace(prms[0], slots_override=slots)
 
 
+def batch_sharding(batch_size: int):
+    """``NamedSharding`` that splits the batch axis across every visible
+    device, or ``None`` when sharding cannot help (a single device, or a
+    batch the device count does not divide) — the graceful fallback path.
+    """
+    devices = jax.devices()
+    if len(devices) <= 1 or batch_size % len(devices) != 0:
+        return None
+    mesh = jax.sharding.Mesh(np.array(devices), ("batch",))
+    return jax.sharding.NamedSharding(mesh,
+                                      jax.sharding.PartitionSpec("batch"))
+
+
 def simulate_batch(traces: Sequence[Trace],
-                   prms: Sequence[SimParams]) -> Dict[str, np.ndarray]:
+                   prms: Sequence[SimParams], *,
+                   shard: bool = True) -> Dict[str, np.ndarray]:
     """Run B (trace, params) points as ONE compiled ``vmap``-of-``scan``.
 
     All traces must already share a common [X, N] shape (see
@@ -219,6 +297,11 @@ def simulate_batch(traces: Sequence[Trace],
     envelope (see :func:`batch_envelope`).  Returns the same metrics dict as
     :func:`simulate` with a leading batch axis; each row is bit-for-bit equal
     to ``simulate(traces[i], replace(prms[i], slots_override=envelope))``.
+
+    With ``shard=True`` (default) and more than one JAX device visible, the
+    batch axis is sharded across devices via :func:`batch_sharding`, so a
+    scenario×parameter grid scales across accelerators; on one device (or a
+    non-divisible batch) it falls back to the single-device path unchanged.
     """
     if len(traces) != len(prms):
         raise ValueError(f"{len(traces)} traces vs {len(prms)} param points")
@@ -228,16 +311,22 @@ def simulate_batch(traces: Sequence[Trace],
             raise ValueError("all traces in a batch must share [X, N]; "
                              f"got {t.is_write.shape} vs {shape}")
     env = batch_envelope(prms)
-    banks = np.stack([_precompute_beats(t, p)[0]
-                      for t, p in zip(traces, prms)])
+    pre = [_precompute_beats(t, p) for t, p in zip(traces, prms)]
+    banks = np.stack([b for b, _, _, _ in pre])
+    hops = np.stack([h for _, _, h, _ in pre])
+    ing = np.stack([i for _, _, _, i in pre])
     iw = np.stack([np.asarray(t.is_write, np.int32) for t in traces])
     b = np.stack([np.asarray(t.burst, np.int32) for t in traces])
     st = np.stack([t.start_or_zeros() for t in traces])
     pr = np.stack([t.prio_or_zeros() for t in traces])
     dyn = np.stack([p.dyn_vector() for p in prms])
+    args = [jnp.asarray(a) for a in
+            (iw, b, banks, hops, ing, st, pr, dyn)]
+    sharding = batch_sharding(len(traces)) if shard else None
+    if sharding is not None:
+        args = [jax.device_put(a, sharding) for a in args]
     fn = _batch_jitted(env)
-    out = fn(jnp.asarray(iw), jnp.asarray(b), jnp.asarray(banks),
-             jnp.asarray(st), jnp.asarray(pr), jnp.asarray(dyn))
+    out = fn(*args)
     return jax.tree_util.tree_map(np.asarray, out)
 
 
@@ -278,33 +367,289 @@ def _age_cap(prm: SimParams, num_masters: int) -> int:
     return int(min(cap - 1, budget))
 
 
-def _core(tx_write, tx_burst, tx_banks, tx_start, tx_prio, dyn, *,
-          prm: SimParams):
+# ---------------------------------------------------------------------------
+# Cycle stages.  Each stage takes (state, ctx) and returns the updated state
+# (plus the values downstream stages consume).  ``ctx`` carries the static
+# per-run tensors and the traced dyn scalars; every stage reads the *current*
+# cycle from ``state["now"]`` and only ``_stage_retire`` advances it.
+# ---------------------------------------------------------------------------
+
+def _stage_accept(st, c):
+    """Command acceptance, one per port per cycle: outstanding credits,
+    split-buffer credits, W-data-bus pacing, the best-effort token-bucket
+    regulator, and the inter-slice router's admission gate (a burst with
+    remote beats needs free ingress credits on every destination slice)."""
+    X, N = c["X"], c["N"]
+    d = c["d"]
+    now = st["now"]
+    ar = jnp.arange(X)
+    nt = st["next_txn"]
+    has_txn = nt < N
+    nt_c = jnp.minimum(nt, N - 1)
+    burst = c["tx_burst"][ar, nt_c]
+    is_w = c["tx_write"][ar, nt_c]
+    ready = c["tx_start"][ar, nt_c] <= now
+    dirn = is_w  # 0 = read, 1 = write (AXI channels are independent)
+    # token-bucket regulator: a best-effort port must hold tokens for the
+    # whole burst — or a full bucket when the burst exceeds the bucket
+    # depth, in which case the balance goes negative (debt) and the port
+    # stalls until refill repays it, so a burst > reg_burst is delayed,
+    # never deadlocked, and the sustained rate cap still holds
+    reg_gate = c["regulated"] & (d["reg_rate"] > 0)
+    reg_tokens = jnp.minimum(st["reg_tokens"] + d["reg_rate"],
+                             d["reg_burst"] * REG_SCALE)
+    reg_need = jnp.minimum(burst, d["reg_burst"]) * REG_SCALE
+    # router admission: every destination slice of the burst's remote beats
+    # must have room for them (slice_ingress == 0 disables the cap; local
+    # beats need no credit, so a 1-slice fabric never blocks here).  Like
+    # the regulator, the per-slice check clamps the requirement to the cap —
+    # a burst with more remote beats than slice_ingress is admitted alone
+    # and drives the counter into debt (delayed, never deadlocked).  Ports
+    # are admitted credit-aware within the cycle: each port also counts the
+    # needs of every lower-indexed candidate (an in-order ingress queue, so
+    # one admission round cannot oversubscribe a slice beyond the debt
+    # allowance; lower port index = admission priority).
+    need = c["tx_ing"][ar, nt_c]                            # [X, NSL]
+    pre_can = (has_txn & (burst > 0) & ready
+               & (st["outstanding"][ar, dirn] < d["outstanding"])
+               & (st["credits"][ar, dirn] >= burst)
+               & ((is_w == 0) | (st["fwd_free"] <= now))
+               & (~reg_gate | (reg_tokens >= reg_need)))
+    need_cand = jnp.where(pre_can[:, None], need, 0)
+    prior = jnp.cumsum(need_cand, axis=0) - need_cand       # exclusive [X,NSL]
+    need_clamped = jnp.minimum(need, d["slice_ingress"])
+    # the per-slice term only applies where the burst actually needs that
+    # slice — a port with no remote beats toward a congested slice (local
+    # traffic especially) must never stall on its debt
+    ing_ok = jnp.all(
+        (d["slice_ingress"] == 0) | (need_clamped == 0)
+        | (st["ing_used"][None, :] + prior + need_clamped
+           <= d["slice_ingress"]),
+        axis=1)
+    can = pre_can & ing_ok
+    reg_tokens = reg_tokens - jnp.where(can & reg_gate,
+                                        burst * REG_SCALE, 0)
+    ing_used = st["ing_used"] + jnp.sum(
+        jnp.where(can[:, None], need, 0), axis=0)
+    accept = st["accept_cycle"].at[ar, nt_c].set(
+        jnp.where(can, now, st["accept_cycle"][ar, nt_c]))
+    next_txn = nt + can.astype(jnp.int32)
+    outstanding = st["outstanding"].at[ar, dirn].add(can.astype(jnp.int32))
+    credits = st["credits"].at[ar, dirn].add(-jnp.where(can, burst, 0))
+    fwd_free = jnp.where(can & (is_w > 0), now + burst, st["fwd_free"])
+    st = dict(st, next_txn=next_txn, outstanding=outstanding,
+              credits=credits, fwd_free=fwd_free, reg_tokens=reg_tokens,
+              ing_used=ing_used, accept_cycle=accept)
+    return st, dict(can=can, burst=burst, is_w=is_w, nt_c=nt_c)
+
+
+def _stage_dispatch(st, acc, c):
+    """Split/dispatch: fan the accepted burst's beats into the per-master
+    slot ring.  Reads expand ``expand_rate`` beats/cycle at the splitter;
+    write data is paced by the 1-beat/cycle port bus.  A remote beat's
+    arrival at its bank queue is delayed ``hop_latency`` per ring hop — the
+    inter-slice router's command-path latency."""
+    X, P, S = c["X"], c["P"], c["S"]
+    prm, d = c["prm"], c["d"]
+    now = st["now"]
+    ar = jnp.arange(X)
+    can, burst, is_w, nt_c = (acc["can"], acc["burst"], acc["is_w"],
+                              acc["nt_c"])
+    offs = jnp.arange(prm.max_burst, dtype=jnp.int32)
+    pace = jnp.where(is_w[:, None] > 0, offs, offs // prm.expand_rate)
+    hops = c["tx_hops"][ar[:, None], nt_c[:, None], offs[None, :]]  # [X, mb]
+    arrive = now + d["cmd_latency"] + pace + d["hop_latency"] * hops
+    bvalid = (offs[None, :] < burst[:, None]) & can[:, None]
+    ring = (st["beats_issued"][:, None] + offs[None, :]) % P
+    flat = ar[:, None] * P + ring
+    flat = jnp.where(bvalid, flat, S)                       # OOB -> drop
+    flat = flat.reshape(-1)
+    sl_busy = st["sl_busy"].at[flat].set(
+        jnp.broadcast_to(1, (X * prm.max_burst,)), mode="drop")
+    sl_bank = st["sl_bank"].at[flat].set(
+        c["tx_banks"][ar[:, None], nt_c[:, None], offs[None, :]]
+        .reshape(-1), mode="drop")
+    sl_arrive = st["sl_arrive"].at[flat].set(
+        arrive.reshape(-1), mode="drop")
+    sl_ready = st["sl_ready"].at[flat].set(
+        jnp.broadcast_to(INF32, (X * prm.max_burst,)), mode="drop")
+    sl_txn = st["sl_txn"].at[flat].set(
+        jnp.broadcast_to(nt_c[:, None], (X, prm.max_burst)).reshape(-1),
+        mode="drop")
+    sl_write = st["sl_write"].at[flat].set(
+        jnp.broadcast_to(is_w[:, None], (X, prm.max_burst)).reshape(-1),
+        mode="drop")
+    sl_hops = st["sl_hops"].at[flat].set(hops.reshape(-1), mode="drop")
+    beats_issued = st["beats_issued"] + jnp.where(can, burst, 0)
+    return dict(st, sl_busy=sl_busy, sl_bank=sl_bank, sl_arrive=sl_arrive,
+                sl_ready=sl_ready, sl_txn=sl_txn, sl_write=sl_write,
+                sl_hops=sl_hops, beats_issued=beats_issued)
+
+
+def _stage_bank_arbitrate(st, c):
+    """Per-bank arbitration, one grant per bank per cycle: priority level
+    first (aging promotes a waiting beat one level per ``qos_aging`` cycles
+    so best-effort can never starve), FCFS within a level (AGE_CAP >=
+    max_cycles: the age term cannot saturate within a run), round-robin among
+    masters as the tie-break.  A granted read's data heads home after the
+    bank's access latency plus the router's return-path hops."""
+    X, S, NB = c["X"], c["S"], c["NB"]
+    d = c["d"]
+    now = st["now"]
+    sl_bank = st["sl_bank"]
+    waiting = (st["sl_busy"] == 1) & (st["sl_arrive"] <= now)
+    bank_ok = st["bank_free"][sl_bank] <= now
+    elig = waiting & bank_ok
+    age = jnp.clip(now - st["sl_arrive"], 0, c["AGE_CAP"])
+    boost = jnp.where(d["qos_aging"] > 0,
+                      age // jnp.maximum(d["qos_aging"], 1), 0)
+    level = jnp.clip(c["slot_prio"] - boost, 0, PRIO_LEVELS - 1)
+    prio = (c["master_of_slot"] - st["bank_rr"][sl_bank]) % X
+    key = (level * (c["AGE_CAP"] + 1) + (c["AGE_CAP"] - age)) * X + prio
+    seg = jnp.where(elig, sl_bank, NB)
+    best = jax.ops.segment_min(jnp.where(elig, key, 2**30), seg,
+                               num_segments=NB + 1)[:-1]    # [NB]
+    is_best = elig & (key == best[sl_bank])
+    # unique winner per bank: lowest slot index among is_best
+    win_slot = jax.ops.segment_min(jnp.where(is_best, c["slot_ids"], S),
+                                   jnp.where(is_best, sl_bank, NB),
+                                   num_segments=NB + 1)[:-1]
+    granted = is_best & (c["slot_ids"] == win_slot[sl_bank])     # [S]
+    bank_free = st["bank_free"].at[sl_bank].add(
+        jnp.where(granted, d["bank_occupancy"]
+                  + jnp.maximum(0, now - st["bank_free"][sl_bank]), 0))
+    bank_rr = st["bank_rr"].at[sl_bank].add(
+        jnp.where(granted,
+                  (c["master_of_slot"] - st["bank_rr"][sl_bank]) % X + 1, 0))
+    sl_busy = jnp.where(granted, 2, st["sl_busy"])
+    sl_ready = jnp.where(granted, now + d["bank_occupancy"]
+                         + d["bank_latency"]
+                         + d["hop_latency"] * st["sl_hops"], st["sl_ready"])
+    freed_r = jax.ops.segment_sum(
+        (granted & (st["sl_write"] == 0)).astype(jnp.int32),
+        c["master_of_slot"], num_segments=X)
+    freed_w = jax.ops.segment_sum(
+        (granted & (st["sl_write"] == 1)).astype(jnp.int32),
+        c["master_of_slot"], num_segments=X)
+    credits = st["credits"].at[:, 0].add(freed_r).at[:, 1].add(freed_w)
+    st = dict(st, bank_free=bank_free, bank_rr=bank_rr, sl_busy=sl_busy,
+              sl_ready=sl_ready, credits=credits)
+    return st, granted
+
+
+def _stage_router_release(st, granted, c):
+    """Inter-slice router bookkeeping at bank grant: a remote beat leaving
+    the ingress queue for its bank returns its slice's ingress credit, and
+    per-slice service counters feed the occupancy metrics."""
+    NSL = c["NSL"]
+    # traced equivalent of address.slice_of_bank (numpy helpers cannot run
+    # under jit): banks are slice-major, so slice = bank // banks_per_slice
+    tgt = st["sl_bank"] // c["bps"]                         # [S] dest slice
+    remote = granted & (st["sl_hops"] > 0)
+    released = jax.ops.segment_sum(
+        remote.astype(jnp.int32), jnp.where(remote, tgt, NSL),
+        num_segments=NSL + 1)[:-1]
+    slice_beats = st["slice_beats"] + jax.ops.segment_sum(
+        granted.astype(jnp.int32), jnp.where(granted, tgt, NSL),
+        num_segments=NSL + 1)[:-1]
+    return dict(st, ing_used=st["ing_used"] - released,
+                slice_beats=slice_beats,
+                remote_beats=st["remote_beats"]
+                + jnp.sum(remote.astype(jnp.int32)))
+
+
+def _stage_return_bus(st, c):
+    """Read-return bus: one beat per port per cycle, oldest-ready first
+    (AXI5 read-data chunking ⇒ beats may return out of order across banks).
+    Write slots free immediately after grant (no return path)."""
+    X, S = c["X"], c["S"]
+    now = st["now"]
+    retq = (st["sl_busy"] == 2) & (st["sl_ready"] <= now) \
+        & (st["sl_write"] == 0)
+    rkey = jnp.clip(st["sl_ready"], 0, 2**20) * 1
+    rbest = jax.ops.segment_min(jnp.where(retq, rkey, 2**30),
+                                jnp.where(retq, c["master_of_slot"], X),
+                                num_segments=X + 1)[:-1]
+    ris = retq & (rkey == rbest[c["master_of_slot"]])
+    rwin = jax.ops.segment_min(jnp.where(ris, c["slot_ids"], S),
+                               jnp.where(ris, c["master_of_slot"], X),
+                               num_segments=X + 1)[:-1]
+    returned = ris & (c["slot_ids"] == rwin[c["master_of_slot"]])
+    sl_busy = jnp.where(returned, 0, st["sl_busy"])
+    beats_done = st["beats_done"] + jax.ops.segment_sum(
+        returned.astype(jnp.int32), c["master_of_slot"], num_segments=X)
+    # write slots free immediately after grant (no return path)
+    sl_busy = jnp.where((sl_busy == 2) & (st["sl_write"] == 1), 0, sl_busy)
+    return dict(st, sl_busy=sl_busy, beats_done=beats_done), returned
+
+
+def _stage_retire(st, granted, returned, c):
+    """Transaction completion + busy-cycle accounting: writes complete at
+    the grant of their last beat, reads at their last return-bus beat; a
+    port is busy while it has any accepted-but-incomplete transaction on
+    that AXI channel.  Advances the cycle counter."""
+    X, N = c["X"], c["N"]
+    d = c["d"]
+    now = st["now"]
+    txn_seg = c["master_of_slot"] * N + st["sl_txn"]
+    rem_dec_w = jax.ops.segment_sum(
+        (granted & (st["sl_write"] == 1)).astype(jnp.int32),
+        txn_seg, num_segments=X * N).reshape(X, N)
+    rem_dec_r = jax.ops.segment_sum(
+        returned.astype(jnp.int32), txn_seg,
+        num_segments=X * N).reshape(X, N)
+    remaining = st["remaining"] - rem_dec_w - rem_dec_r
+    just_done = (remaining == 0) & (st["remaining"] > 0)
+    complete = jnp.where(just_done, now + d["ret_latency"],
+                         st["complete_cycle"])
+    done_r = jnp.sum(just_done & (c["tx_write"] == 0), axis=1)
+    done_w = jnp.sum(just_done & (c["tx_write"] == 1), axis=1)
+    outstanding = st["outstanding"].at[:, 0].add(-done_r) \
+        .at[:, 1].add(-done_w)
+    in_r = (outstanding[:, 0] > 0).astype(jnp.int32)
+    in_w = (outstanding[:, 1] > 0).astype(jnp.int32)
+    return dict(st, now=now + 1, outstanding=outstanding,
+                remaining=remaining, complete_cycle=complete,
+                busy_r=st["busy_r"] + in_r, busy_w=st["busy_w"] + in_w,
+                busy_any=st["busy_any"] + jnp.maximum(in_r, in_w))
+
+
+def _core(tx_write, tx_burst, tx_banks, tx_hops, tx_ing, tx_start, tx_prio,
+          dyn, *, prm: SimParams):
     X, N = tx_write.shape
     P = prm.slots_per_master
     S = X * P
     NB = prm.geom.num_banks
-    AGE_CAP = _age_cap(prm, X)
+    NSL = prm.geom.num_slices
 
     master_of_slot = jnp.repeat(jnp.arange(X, dtype=jnp.int32), P)
 
     dyn = jnp.asarray(dyn, jnp.int32)
-    d_outstanding, d_split_buffer, d_cmd_lat, d_ret_lat, d_bank_occ, \
-        d_bank_lat, d_qos_aging, d_reg_rate, d_reg_burst = \
-        (dyn[i] for i in range(len(DYN_FIELDS)))
+    d = {name: dyn[i] for i, name in enumerate(DYN_FIELDS)}
 
     tx_prio = jnp.clip(jnp.asarray(tx_prio, jnp.int32), 0, PRIO_LEVELS - 1)
-    slot_prio = tx_prio[master_of_slot]                      # [S]
-    regulated = tx_prio >= REGULATED_PRIO                    # [X]
+
+    ctx = dict(
+        X=X, N=N, P=P, S=S, NB=NB, NSL=NSL,
+        bps=prm.geom.banks_per_slice,
+        AGE_CAP=_age_cap(prm, X),
+        prm=prm, d=d,
+        master_of_slot=master_of_slot,
+        slot_ids=jnp.arange(S, dtype=jnp.int32),
+        slot_prio=tx_prio[master_of_slot],                   # [S]
+        regulated=tx_prio >= REGULATED_PRIO,                 # [X]
+        tx_write=tx_write, tx_burst=tx_burst, tx_banks=tx_banks,
+        tx_hops=tx_hops, tx_ing=tx_ing, tx_start=tx_start,
+    )
 
     state = dict(
         now=jnp.int32(0),
         next_txn=jnp.zeros((X,), jnp.int32),
         outstanding=jnp.zeros((X, 2), jnp.int32),  # [:,0] read, [:,1] write
-        credits=jnp.zeros((X, 2), jnp.int32) + d_split_buffer,
+        credits=jnp.zeros((X, 2), jnp.int32) + d["split_buffer"],
         beats_issued=jnp.zeros((X,), jnp.int32),
         fwd_free=jnp.zeros((X,), jnp.int32),       # W-channel data-bus free time
-        reg_tokens=jnp.zeros((X,), jnp.int32) + d_reg_burst * REG_SCALE,
+        reg_tokens=jnp.zeros((X,), jnp.int32) + d["reg_burst"] * REG_SCALE,
         busy_r=jnp.zeros((X,), jnp.int32),         # cycles with a read in flight
         busy_w=jnp.zeros((X,), jnp.int32),
         busy_any=jnp.zeros((X,), jnp.int32),
@@ -315,8 +660,13 @@ def _core(tx_write, tx_burst, tx_banks, tx_start, tx_prio, dyn, *,
         sl_ready=jnp.full((S,), INF32),            # bank done, awaiting return
         sl_txn=jnp.zeros((S,), jnp.int32),
         sl_write=jnp.zeros((S,), jnp.int32),
+        sl_hops=jnp.zeros((S,), jnp.int32),        # inter-slice ring hops
         bank_free=jnp.zeros((NB,), jnp.int32),
         bank_rr=jnp.zeros((NB,), jnp.int32),
+        # inter-slice router state + per-slice service counters
+        ing_used=jnp.zeros((NSL,), jnp.int32),
+        slice_beats=jnp.zeros((NSL,), jnp.int32),
+        remote_beats=jnp.int32(0),
         # per-txn bookkeeping
         remaining=jnp.where(tx_burst > 0, tx_burst, 0).astype(jnp.int32),
         accept_cycle=jnp.full((X, N), -1, jnp.int32),
@@ -325,159 +675,13 @@ def _core(tx_write, tx_burst, tx_banks, tx_start, tx_prio, dyn, *,
     )
 
     def cycle(st, _):
-        now = st["now"]
-
-        # ---- 1. command acceptance (one per port per cycle) ----
-        nt = st["next_txn"]
-        has_txn = nt < N
-        nt_c = jnp.minimum(nt, N - 1)
-        burst = tx_burst[jnp.arange(X), nt_c]
-        is_w = tx_write[jnp.arange(X), nt_c]
-        ready = tx_start[jnp.arange(X), nt_c] <= now
-        dirn = is_w  # 0 = read, 1 = write (AXI channels are independent)
-        # token-bucket regulator: a best-effort port must hold tokens for the
-        # whole burst — or a full bucket when the burst exceeds the bucket
-        # depth, in which case the balance goes negative (debt) and the port
-        # stalls until refill repays it, so a burst > reg_burst is delayed,
-        # never deadlocked, and the sustained rate cap still holds
-        reg_gate = regulated & (d_reg_rate > 0)
-        reg_tokens = jnp.minimum(st["reg_tokens"] + d_reg_rate,
-                                 d_reg_burst * REG_SCALE)
-        reg_need = jnp.minimum(burst, d_reg_burst) * REG_SCALE
-        can = (has_txn & (burst > 0) & ready
-               & (st["outstanding"][jnp.arange(X), dirn] < d_outstanding)
-               & (st["credits"][jnp.arange(X), dirn] >= burst)
-               & ((is_w == 0) | (st["fwd_free"] <= now))
-               & (~reg_gate | (reg_tokens >= reg_need)))
-        reg_tokens = reg_tokens - jnp.where(can & reg_gate,
-                                            burst * REG_SCALE, 0)
-        # beat arrival times: reads expand 4/cycle at the splitter; write data
-        # is paced by the 1-beat/cycle port bus
-        offs = jnp.arange(prm.max_burst, dtype=jnp.int32)
-        pace = jnp.where(is_w[:, None] > 0, offs, offs // prm.expand_rate)
-        arrive = now + d_cmd_lat + pace                         # [X, mb]
-        bvalid = (offs[None, :] < burst[:, None]) & can[:, None]
-        ring = (st["beats_issued"][:, None] + offs[None, :]) % P
-        flat = jnp.arange(X)[:, None] * P + ring
-        flat = jnp.where(bvalid, flat, S)                       # OOB -> drop
-        sl_busy = st["sl_busy"].at[flat.reshape(-1)].set(
-            jnp.broadcast_to(1, (X * prm.max_burst,)), mode="drop")
-        sl_bank = st["sl_bank"].at[flat.reshape(-1)].set(
-            tx_banks[jnp.arange(X)[:, None], nt_c[:, None], offs[None, :]]
-            .reshape(-1), mode="drop")
-        sl_arrive = st["sl_arrive"].at[flat.reshape(-1)].set(
-            arrive.reshape(-1), mode="drop")
-        sl_ready = st["sl_ready"].at[flat.reshape(-1)].set(
-            jnp.broadcast_to(INF32, (X * prm.max_burst,)), mode="drop")
-        sl_txn = st["sl_txn"].at[flat.reshape(-1)].set(
-            jnp.broadcast_to(nt_c[:, None], (X, prm.max_burst)).reshape(-1),
-            mode="drop")
-        sl_write = st["sl_write"].at[flat.reshape(-1)].set(
-            jnp.broadcast_to(is_w[:, None], (X, prm.max_burst)).reshape(-1),
-            mode="drop")
-        accept = st["accept_cycle"].at[jnp.arange(X), nt_c].set(
-            jnp.where(can, now, st["accept_cycle"][jnp.arange(X), nt_c]))
-        next_txn = nt + can.astype(jnp.int32)
-        outstanding = st["outstanding"].at[jnp.arange(X), dirn].add(
-            can.astype(jnp.int32))
-        credits = st["credits"].at[jnp.arange(X), dirn].add(
-            -jnp.where(can, burst, 0))
-        beats_issued = st["beats_issued"] + jnp.where(can, burst, 0)
-        fwd_free = jnp.where(can & (is_w > 0), now + burst, st["fwd_free"])
-
-        # ---- 2. per-bank arbitration (one grant per bank per cycle) ----
-        # priority level first (aging promotes a waiting beat one level per
-        # ``qos_aging`` cycles so best-effort can never starve), FCFS within
-        # a level (AGE_CAP >= max_cycles: the age term cannot saturate within
-        # a run), round-robin among masters as the tie-break
-        waiting = (sl_busy == 1) & (sl_arrive <= now)
-        bank_ok = st["bank_free"][sl_bank] <= now
-        elig = waiting & bank_ok
-        age = jnp.clip(now - sl_arrive, 0, AGE_CAP)
-        boost = jnp.where(d_qos_aging > 0,
-                          age // jnp.maximum(d_qos_aging, 1), 0)
-        level = jnp.clip(slot_prio - boost, 0, PRIO_LEVELS - 1)
-        prio = (master_of_slot - st["bank_rr"][sl_bank]) % X
-        key = (level * (AGE_CAP + 1) + (AGE_CAP - age)) * X + prio
-        seg = jnp.where(elig, sl_bank, NB)
-        best = jax.ops.segment_min(jnp.where(elig, key, 2**30), seg,
-                                   num_segments=NB + 1)[:-1]    # [NB]
-        is_best = elig & (key == best[sl_bank])
-        # unique winner per bank: lowest slot index among is_best
-        slot_ids = jnp.arange(S, dtype=jnp.int32)
-        win_slot = jax.ops.segment_min(jnp.where(is_best, slot_ids, S),
-                                       jnp.where(is_best, sl_bank, NB),
-                                       num_segments=NB + 1)[:-1]
-        granted = is_best & (slot_ids == win_slot[sl_bank])     # [S]
-        bank_free = st["bank_free"].at[sl_bank].add(
-            jnp.where(granted, d_bank_occ
-                      + jnp.maximum(0, now - st["bank_free"][sl_bank]), 0))
-        bank_rr = st["bank_rr"].at[sl_bank].add(
-            jnp.where(granted, (master_of_slot - st["bank_rr"][sl_bank]) % X
-                      + 1, 0))
-        sl_busy = jnp.where(granted, 2, sl_busy)
-        sl_ready = jnp.where(granted, now + d_bank_occ + d_bank_lat, sl_ready)
-        freed_r = jax.ops.segment_sum(
-            (granted & (sl_write == 0)).astype(jnp.int32), master_of_slot,
-            num_segments=X)
-        freed_w = jax.ops.segment_sum(
-            (granted & (sl_write == 1)).astype(jnp.int32), master_of_slot,
-            num_segments=X)
-        credits = credits.at[:, 0].add(freed_r).at[:, 1].add(freed_w)
-
-        # writes complete at grant of their last beat
-        rem_dec_w = jax.ops.segment_sum(
-            (granted & (sl_write == 1)).astype(jnp.int32),
-            master_of_slot * N + sl_txn, num_segments=X * N).reshape(X, N)
-
-        # ---- 3. read return bus: one beat per port per cycle ----
-        retq = (sl_busy == 2) & (sl_ready <= now) & (sl_write == 0)
-        rkey = jnp.clip(sl_ready, 0, 2**20) * 1
-        rbest = jax.ops.segment_min(jnp.where(retq, rkey, 2**30),
-                                    jnp.where(retq, master_of_slot, X),
-                                    num_segments=X + 1)[:-1]
-        ris = retq & (rkey == rbest[master_of_slot])
-        rwin = jax.ops.segment_min(jnp.where(ris, slot_ids, S),
-                                   jnp.where(ris, master_of_slot, X),
-                                   num_segments=X + 1)[:-1]
-        returned = ris & (slot_ids == rwin[master_of_slot])
-        sl_busy = jnp.where(returned, 0, sl_busy)
-        beats_done = st["beats_done"] + jax.ops.segment_sum(
-            returned.astype(jnp.int32), master_of_slot, num_segments=X)
-        rem_dec_r = jax.ops.segment_sum(
-            returned.astype(jnp.int32),
-            master_of_slot * N + sl_txn, num_segments=X * N).reshape(X, N)
-
-        # write slots free immediately after grant (no return path)
-        sl_busy = jnp.where((sl_busy == 2) & (sl_write == 1), 0, sl_busy)
-
-        remaining = st["remaining"] - rem_dec_w - rem_dec_r
-        just_done = (remaining == 0) & (st["remaining"] > 0)
-        complete = jnp.where(just_done, now + d_ret_lat,
-                             st["complete_cycle"])
-        done_r = jnp.sum(just_done & (tx_write == 0), axis=1)
-        done_w = jnp.sum(just_done & (tx_write == 1), axis=1)
-        outstanding = outstanding.at[:, 0].add(-done_r).at[:, 1].add(-done_w)
-
-        # busy-cycle accounting: a port is busy while it has any accepted-
-        # but-incomplete transaction on that AXI channel
-        in_r = (outstanding[:, 0] > 0).astype(jnp.int32)
-        in_w = (outstanding[:, 1] > 0).astype(jnp.int32)
-        busy_r = st["busy_r"] + in_r
-        busy_w = st["busy_w"] + in_w
-        busy_any = st["busy_any"] + jnp.maximum(in_r, in_w)
-
-        new_st = dict(st, now=now + 1, next_txn=next_txn,
-                      outstanding=outstanding, credits=credits,
-                      beats_issued=beats_issued, fwd_free=fwd_free,
-                      reg_tokens=reg_tokens, busy_r=busy_r, busy_w=busy_w,
-                      busy_any=busy_any,
-                      sl_busy=sl_busy, sl_bank=sl_bank, sl_arrive=sl_arrive,
-                      sl_ready=sl_ready, sl_txn=sl_txn, sl_write=sl_write,
-                      bank_free=bank_free, bank_rr=bank_rr,
-                      remaining=remaining, accept_cycle=accept,
-                      complete_cycle=complete, beats_done=beats_done)
-        return new_st, None
+        st, acc = _stage_accept(st, ctx)
+        st = _stage_dispatch(st, acc, ctx)
+        st, granted = _stage_bank_arbitrate(st, ctx)
+        st = _stage_router_release(st, granted, ctx)
+        st, returned = _stage_return_bus(st, ctx)
+        st = _stage_retire(st, granted, returned, ctx)
+        return st, None
 
     state, _ = jax.lax.scan(cycle, state, None, length=prm.max_cycles)
     return _metrics(state, tx_burst, tx_write, prm)
@@ -512,6 +716,10 @@ def _metrics(st, burst, is_w, prm: SimParams) -> Dict[str, jnp.ndarray]:
         cyc = jnp.maximum(busy, 1).astype(jnp.float32)
         return jnp.where(jnp.sum(sel, 1) > 0, beats / cyc, 0.0)
 
+    # granted-beat population for the remote fraction: remote_beats and
+    # slice_beats are both counted at bank grant, so the ratio stays in
+    # [0, 1] even when a run hits max_cycles without draining
+    granted_beats = jnp.sum(st["slice_beats"])
     return {
         "throughput": tput(real & done),
         "read_throughput": tput(r),
@@ -531,7 +739,12 @@ def _metrics(st, burst, is_w, prm: SimParams) -> Dict[str, jnp.ndarray]:
         "cycles": st["now"],
         "complete_cycle": st["complete_cycle"],
         "accept_cycle": st["accept_cycle"],
+        # multi-slice fabric view: beats each slice's banks served, and how
+        # much traffic crossed the inter-slice router (0 at num_slices=1)
+        "slice_beats": st["slice_beats"],
+        "remote_beats": st["remote_beats"],
+        "remote_beat_fraction": jnp.where(
+            granted_beats > 0,
+            st["remote_beats"] / jnp.maximum(granted_beats, 1)
+            .astype(jnp.float32), 0.0),
     }
-
-
-

@@ -11,7 +11,8 @@ from repro.scenarios.spec import (CompiledScenario, MasterSpec, Scenario,
 from repro.scenarios.generators import GENERATORS
 from repro.scenarios.library import (highway_pilot, parking_surround,
                                      preset_scenarios, qos_isolation,
-                                     sensor_stress, urban_perception)
+                                     sensor_stress, slice_scaling,
+                                     urban_perception)
 from repro.scenarios.sweep import (SweepPoint, SweepResult, run_sweep,
                                    summarize_point)
 
@@ -20,5 +21,5 @@ __all__ = [
     "QOS_PRIORITY", "compile_scenario", "GENERATORS", "SweepPoint",
     "SweepResult", "run_sweep", "summarize_point", "highway_pilot",
     "parking_surround", "preset_scenarios", "qos_isolation", "sensor_stress",
-    "urban_perception",
+    "slice_scaling", "urban_perception",
 ]

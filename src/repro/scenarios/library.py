@@ -7,7 +7,7 @@ Radar + Lidar feeding an AI accelerator, with CPU housekeeping underneath.
 """
 from __future__ import annotations
 
-from repro.core.address import MemoryGeometry
+from repro.core.address import MemoryGeometry, master_home_slices
 from repro.scenarios.spec import MasterSpec, Scenario
 
 
@@ -95,8 +95,47 @@ def qos_isolation(txns: int = 256, geom: MemoryGeometry = MemoryGeometry(),
                     "saturating best-effort aggressors")
 
 
+def slice_scaling(num_slices: int = 2, txns: int = 256, *,
+                  remote: bool = False) -> Scenario:
+    """Multi-slice scaling probe (§IV scalability/modularity): 16 masters
+    tiled across ``num_slices`` memory instances, each slice's port group a
+    miniature ADAS pipeline — one braking-path Radar (safety, deadline) plus
+    saturating NPU streamers — under region-affine slicing so placement
+    controls locality.
+
+    ``remote=False`` pins every master's working set to its *home* slice
+    (slice-local placement, zero router crossings); ``remote=True`` rotates
+    each group's placement one slice over, so every beat pays inter-slice
+    hops and ingress credits — the configuration that exposes the router
+    penalty in ``benchmarks/slice_scaling.py``.
+    """
+    geom = MemoryGeometry(num_slices=num_slices, slice_policy="region")
+    X = geom.num_masters
+    home = master_home_slices(X, geom)
+    masters = []
+    prev = -1
+    for m in range(X):
+        target = int((home[m] + 1) % num_slices) if remote else int(home[m])
+        first_of_group = home[m] != prev
+        prev = home[m]
+        if first_of_group:     # one safety Radar fronts each slice's group
+            masters.append(MasterSpec("radar", qos="safety", rate=0.9,
+                                      txns=txns, seed=m, deadline=4096,
+                                      slice_affinity=target))
+        else:                  # the rest stream NPU tiles at full rate
+            masters.append(MasterSpec("npu", qos="realtime", rate=1.0,
+                                      txns=txns, seed=100 + m,
+                                      slice_affinity=target))
+    name = f"slice_scaling_s{num_slices}_{'remote' if remote else 'local'}"
+    return Scenario(name, masters, geom,
+                    f"{num_slices}-slice fabric, per-slice Radar+NPU groups, "
+                    f"{'remote' if remote else 'slice-local'} placement")
+
+
 def preset_scenarios(txns: int = 256):
-    """All presets, for sweeps and benchmarks."""
+    """All presets sharing the default single-slice geometry, for sweeps and
+    benchmarks (``slice_scaling`` is separate: its geometry varies with the
+    slice count, so it cannot share a batched sweep's static envelope)."""
     return [urban_perception(txns), highway_pilot(txns),
             parking_surround(txns), sensor_stress(txns),
             qos_isolation(txns)]

@@ -21,7 +21,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.address import MemoryGeometry
+from repro.core.address import MemoryGeometry, master_home_slices
 from repro.core.simulator import PRIO_LEVELS, Trace
 from repro.core.traffic import pad_rows
 from repro.scenarios.generators import GENERATORS
@@ -50,6 +50,10 @@ class MasterSpec:
     priority: Optional[int] = None            # arbiter level; None = from qos
     deadline: Optional[int] = None            # per-txn completion bound
                                               # (cycles past its start time)
+    slice_affinity: Optional[int] = None      # auto-place the region inside
+                                              # this slice's span (requires
+                                              # geom.slice_policy="region"
+                                              # on a multi-slice fabric)
 
     def effective_priority(self) -> int:
         """Arbitration level this master presents to the simulator."""
@@ -96,11 +100,21 @@ class Scenario:
         claimed = []
         for i, m in enumerate(self.masters):
             m.validate()
+            if m.slice_affinity is not None:
+                if not 0 <= m.slice_affinity < self.geom.num_slices:
+                    raise ValueError(
+                        f"master {i} slice_affinity {m.slice_affinity} out "
+                        f"of range for a {self.geom.num_slices}-slice fabric")
+                if self.geom.num_slices > 1 and \
+                        self.geom.slice_policy != "region":
+                    raise ValueError(
+                        f"master {i} sets slice_affinity but "
+                        f"slice_policy={self.geom.slice_policy!r} interleaves "
+                        "addresses across slices — slice-affine placement "
+                        "needs slice_policy='region'")
             if m.region is None:
                 continue
-            if m.region[1] > self.geom.beats_total:
-                raise ValueError(f"region {m.region} exceeds memory "
-                                 f"({self.geom.beats_total} beats)")
+            _check_region_bounds(i, m.region, self.geom)
             for j, other in claimed:
                 if m.region[0] < other[1] and other[0] < m.region[1]:
                     raise ValueError(
@@ -129,41 +143,100 @@ class CompiledScenario:
                         np.int32)
 
 
+def _check_region_bounds(i: int, region: Tuple[int, int],
+                         geom: MemoryGeometry) -> None:
+    """Loud, actionable error when a declared region falls outside the
+    fabric's address space — never wrap or overlap silently."""
+    lo, hi = region
+    if lo < 0 or hi > geom.beats_total or lo >= hi:
+        raise ValueError(
+            f"master {i} region {region} exceeds memory or is inverted: the "
+            f"fabric has {geom.beats_total} beats "
+            f"({geom.beats_total * geom.beat_bytes} bytes across "
+            f"{geom.num_slices} slice(s)); declared regions must satisfy "
+            "0 <= lo < hi <= beats_total")
+
+
+def _partition_gap(count: int, bounds: Tuple[int, int],
+                   claims: List[Tuple[int, int]], what: str
+                   ) -> List[Tuple[int, int]]:
+    """Equally partition the largest free gap inside ``bounds`` (given the
+    already-claimed regions) into ``count`` slots of >= MIN_REGION_BEATS."""
+    b_lo, b_hi = bounds
+    gaps, cur = [], b_lo
+    for lo, hi in sorted(claims):
+        if hi <= b_lo or lo >= b_hi:
+            continue
+        lo, hi = max(lo, b_lo), min(hi, b_hi)
+        if lo > cur:
+            gaps.append((cur, lo))
+        cur = max(cur, hi)
+    if cur < b_hi:
+        gaps.append((cur, b_hi))
+    if not gaps:
+        raise ValueError(f"no address space left for {what}")
+    g_lo, g_hi = max(gaps, key=lambda g: g[1] - g[0])
+    slot = (g_hi - g_lo) // count
+    if slot < MIN_REGION_BEATS:
+        raise ValueError(
+            f"largest free gap ({g_hi - g_lo} beats) cannot fit "
+            f"{count} {what} of >= {MIN_REGION_BEATS} "
+            "beats each")
+    return [(g_lo + i * slot, g_lo + (i + 1) * slot) for i in range(count)]
+
+
 def resolve_regions(scenario: Scenario) -> List[Tuple[int, int]]:
     """Explicit regions pass through; unplaced masters equally partition the
     *largest free gap* left by the explicit claims (so pinning a master high
     in memory doesn't starve auto placement), and every auto slot must meet
-    the same ``MIN_REGION_BEATS`` floor explicit regions are held to."""
-    total = scenario.geom.beats_total
-    explicit = sorted(m.region for m in scenario.masters
-                      if m.region is not None)
-    auto_count = sum(1 for m in scenario.masters if m.region is None)
-    out: List[Tuple[int, int]] = []
-    if auto_count:
-        gaps, cur = [], 0
-        for lo, hi in explicit:
-            if lo > cur:
-                gaps.append((cur, lo))
-            cur = max(cur, hi)
-        if cur < total:
-            gaps.append((cur, total))
-        if not gaps:
-            raise ValueError("no address space left for auto-placed masters")
-        g_lo, g_hi = max(gaps, key=lambda g: g[1] - g[0])
-        slot = (g_hi - g_lo) // auto_count
-        if slot < MIN_REGION_BEATS:
-            raise ValueError(
-                f"largest free gap ({g_hi - g_lo} beats) cannot fit "
-                f"{auto_count} auto-placed masters of >= {MIN_REGION_BEATS} "
-                "beats each")
-        auto_base = [g_lo + i * slot for i in range(auto_count)]
-    k = 0
-    for m in scenario.masters:
+    the same ``MIN_REGION_BEATS`` floor explicit regions are held to.
+
+    On a multi-slice fabric, a master with ``slice_affinity=s`` is auto-placed
+    inside slice ``s``'s contiguous span (``slice_policy="region"``), so its
+    working set stays slice-local (or deliberately remote — the
+    ``slice_scaling`` preset uses both).  Under region-affine slicing an
+    auto-placed master *without* an affinity defaults to its home slice
+    (slice-local placement is the architecture's intent), so affine and
+    unconstrained masters coexist: each slice's span is partitioned among the
+    masters routed to it.  Hash-interleaved slicing has no contiguous spans,
+    so there placement falls back to the global largest-gap rule.
+    """
+    geom = scenario.geom
+    masters = scenario.masters
+    for i, m in enumerate(masters):
         if m.region is not None:
-            out.append((int(m.region[0]), int(m.region[1])))
+            _check_region_bounds(i, m.region, geom)
+    claims: List[Tuple[int, int]] = [
+        (int(m.region[0]), int(m.region[1]))
+        for m in masters if m.region is not None]
+    out: List[Optional[Tuple[int, int]]] = [
+        (int(m.region[0]), int(m.region[1])) if m.region is not None
+        else None for m in masters]
+    affine_spans = geom.num_slices > 1 and geom.slice_policy == "region"
+    home = master_home_slices(len(masters), geom) if affine_spans else None
+    affine: Dict[int, List[int]] = {}
+    free: List[int] = []
+    for i, m in enumerate(masters):
+        if m.region is not None:
+            continue
+        aff = m.slice_affinity
+        if aff is None and affine_spans:
+            aff = int(home[i])                # default: stay slice-local
+        if aff is not None and affine_spans:
+            affine.setdefault(int(aff), []).append(i)
         else:
-            out.append((auto_base[k], auto_base[k] + slot))
-            k += 1
+            free.append(i)
+    for s in sorted(affine):
+        slots = _partition_gap(len(affine[s]), geom.slice_span(s), claims,
+                               f"slice-{s} auto-placed masters")
+        for i, slot in zip(affine[s], slots):
+            out[i] = slot
+        claims += slots
+    if free:
+        slots = _partition_gap(len(free), (0, geom.beats_total), claims,
+                               "auto-placed masters")
+        for i, slot in zip(free, slots):
+            out[i] = slot
     return out
 
 

@@ -19,6 +19,7 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.core.address import master_home_slices, slice_of_beat
 from repro.core.qos import regions_isolated, touched_subbanks
 from repro.core.simulator import (SimParams, batch_envelope, simulate,
                                   simulate_batch)
@@ -41,6 +42,7 @@ class SweepResult:
     metrics: Dict[str, np.ndarray]      # raw simulator outputs for this point
     per_class: Dict[str, Dict[str, float]]
     isolation: Dict[str, object]
+    slices: Dict[str, object] = field(default_factory=dict)
 
     def summary(self) -> Dict[str, object]:
         return {
@@ -50,6 +52,7 @@ class SweepResult:
             "all_done": bool(self.metrics["all_done"]),
             "per_class": self.per_class,
             "isolation": self.isolation,
+            "slices": self.slices,
         }
 
 
@@ -73,14 +76,20 @@ def _class_stats(compiled: CompiledScenario,
     real = np.asarray(trace.burst) > 0
     done = (com >= 0) & (acc >= 0) & real
     lat = (com - acc).astype(np.float64)
+    # end-to-end service latency: earliest-issue (``start``) to completion.
+    # Acceptance-based latency hides time a gated port spends *waiting to be
+    # accepted* (outstanding credits, regulator, router ingress); the e2e
+    # view charges it — the penalty deadline accounting and the slice_scaling
+    # benchmark's remote-placement numbers are about.
+    lat_e2e = (com - start).astype(np.float64)
     X = trace.num_masters
     deadlines = compiled.deadlines or [None] * X
     dl = np.array([-1 if d is None else int(d) for d in deadlines])
     r_tput = np.asarray(metrics["read_throughput"])
     w_tput = np.asarray(metrics["write_throughput"])
 
-    def pctl_block(stats, prefix, sel):
-        vals = lat[sel]
+    def pctl_block(stats, prefix, sel, values=lat):
+        vals = values[sel]
         for p in PERCENTILES:
             stats[f"{prefix}_lat_p{p}"] = (
                 float(np.percentile(vals, p)) if vals.size else float("nan"))
@@ -105,6 +114,8 @@ def _class_stats(compiled: CompiledScenario,
                                if has_w.any() else float("nan"))
         pctl_block(stats, "read", sel & (iw == 0))
         pctl_block(stats, "write", sel & (iw == 1))
+        pctl_block(stats, "read_e2e", sel & (iw == 0), lat_e2e)
+        pctl_block(stats, "write_e2e", sel & (iw == 1), lat_e2e)
         rows_dl = rows[dl[rows] >= 0]
         considered = real[rows_dl]
         missed = considered & (~done[rows_dl]
@@ -136,11 +147,47 @@ def _isolation_report(compiled: CompiledScenario) -> Dict[str, object]:
             "cross_class_shared_subbanks": int(cross)}
 
 
+def _slice_report(compiled: CompiledScenario,
+                  metrics: Dict[str, np.ndarray]) -> Dict[str, object]:
+    """Multi-slice fabric view of one point: how much offered traffic crosses
+    the inter-slice router (a *static* property of placement: beats whose
+    target slice differs from the issuing master's home slice) and how evenly
+    the slices' banks were occupied (from the simulator's per-slice service
+    counters).  At ``num_slices=1`` everything is trivially local."""
+    geom = compiled.scenario.geom
+    trace = compiled.trace
+    home = master_home_slices(trace.num_masters, geom)
+    crossing, total = 0, 0
+    per_master = []
+    for m in range(trace.num_masters):
+        beats = [np.arange(a, a + b)
+                 for a, b in zip(trace.addr[m], trace.burst[m]) if b > 0]
+        if not beats:
+            per_master.append(0.0)
+            continue
+        sl = slice_of_beat(np.concatenate(beats), geom)[0]
+        n, x = len(sl), int((sl != home[m]).sum())
+        crossing += x
+        total += n
+        per_master.append(x / n)
+    sb = np.asarray(metrics.get("slice_beats", np.zeros(geom.num_slices)),
+                    np.float64)
+    occ = (sb / sb.sum()).tolist() if sb.sum() > 0 else sb.tolist()
+    return {
+        "num_slices": int(geom.num_slices),
+        "crossing_fraction": (crossing / total) if total else 0.0,
+        "crossing_fraction_per_master": per_master,
+        "slice_beats": sb.astype(np.int64).tolist(),
+        "slice_occupancy": occ,
+    }
+
+
 def summarize_point(compiled: CompiledScenario, params: SimParams,
                     metrics: Dict[str, np.ndarray]) -> SweepResult:
     return SweepResult(compiled.scenario.name, params, metrics,
                        _class_stats(compiled, metrics),
-                       _isolation_report(compiled))
+                       _isolation_report(compiled),
+                       _slice_report(compiled, metrics))
 
 
 def run_sweep(points: Sequence[SweepPoint], *,

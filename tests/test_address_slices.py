@@ -1,0 +1,133 @@
+"""Property tests for the slice-aware address map (hypothesis).
+
+The slice level sits above the cluster split; these properties pin down:
+  * addr -> (slice, local) is a bijection (full small-geometry coverage and
+    injectivity on random windows of the 32 MB-per-slice geometry)
+  * hash-interleaved slicing balances beats across slices (exactly, for
+    round-aligned windows) and preserves the fractal conflict-freedom:
+    a 256*S-beat aligned linear run touches every (slice, bank) exactly once
+  * num_slices=1 reproduces the pre-slice flat_bank_id bit-for-bit
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.address import (MemoryGeometry, _hash32, _map_beat_local,
+                                flat_bank_id, master_home_slices,
+                                slice_hops, slice_of_beat)
+
+#: small per-slice capacity so full-space properties stay cheap (4096 beats)
+SMALL = 32 * 4096
+
+slices_st = st.sampled_from([1, 2, 4])
+policy_st = st.sampled_from(["hash", "region"])
+
+
+def _old_flat_bank_id(beat_addr, geom):
+    """The pre-slice mapping, re-derived: what flat_bank_id computed before
+    the slice level existed (and must still compute at num_slices=1)."""
+    c, a, b = _map_beat_local(np.asarray(beat_addr).astype(np.int64), geom)
+    return (c * geom.arrays_per_cluster + a) * geom.banks_per_array + b
+
+
+@given(st.integers(min_value=0, max_value=2**18))
+@settings(max_examples=40, deadline=None)
+def test_single_slice_equals_old_mapping(base):
+    g = MemoryGeometry()
+    a = np.arange(base, base + 512)
+    assert np.array_equal(flat_bank_id(a, g), _old_flat_bank_id(a, g))
+    sl, local = slice_of_beat(a, g)
+    assert (sl == 0).all() and np.array_equal(np.asarray(local), a)
+
+
+@given(slices_st, policy_st)
+@settings(max_examples=12, deadline=None)
+def test_slice_mapping_is_bijection_on_full_small_space(nsl, policy):
+    g = MemoryGeometry(total_bytes=SMALL, num_slices=nsl, slice_policy=policy)
+    a = np.arange(g.beats_total)
+    sl, local = slice_of_beat(a, g)
+    local = np.asarray(local)
+    assert sl.min() >= 0 and sl.max() == nsl - 1
+    # every slice receives exactly beats_per_slice addresses …
+    assert np.bincount(sl, minlength=nsl).tolist() == \
+        [g.beats_per_slice] * nsl
+    # … and covers its local space exactly once: a bijection
+    for s in range(nsl):
+        assert np.array_equal(np.sort(local[sl == s]),
+                              np.arange(g.beats_per_slice))
+
+
+@given(st.integers(min_value=0, max_value=2**16), slices_st, policy_st)
+@settings(max_examples=40, deadline=None)
+def test_slice_mapping_injective_on_windows(base, nsl, policy):
+    """On the full-size geometry: distinct addresses never collide in
+    (slice, local) — injectivity on arbitrary windows."""
+    g = MemoryGeometry(num_slices=nsl, slice_policy=policy)
+    a = np.arange(base, base + 1024)
+    sl, local = slice_of_beat(a, g)
+    pairs = np.asarray(sl, np.int64) * g.beats_per_slice + np.asarray(local)
+    assert len(np.unique(pairs)) == len(a)
+
+
+@given(st.integers(min_value=0, max_value=2**12), slices_st)
+@settings(max_examples=40, deadline=None)
+def test_hash_slicing_balances_round_aligned_windows_exactly(rounds0, nsl):
+    """Any window of whole interleave rounds splits exactly evenly across
+    slices (each round of S granule-chunks visits S distinct slices)."""
+    g = MemoryGeometry(num_slices=nsl)
+    w = g.slice_granule * nsl                  # one round
+    base = rounds0 * w
+    sl, _ = slice_of_beat(np.arange(base, base + 4 * w), g)
+    assert np.bincount(sl, minlength=nsl).tolist() == \
+        [4 * g.slice_granule] * nsl
+
+
+@given(st.integers(min_value=0, max_value=2**10 - 1), slices_st)
+@settings(max_examples=15, deadline=None)
+def test_linear_run_is_bank_conflict_free_across_slices(block, nsl):
+    """The fractal guarantee survives slicing: 256*S consecutive aligned
+    beats hit every (slice, cluster, array, bank) exactly once — and spread
+    evenly over arrays and banks along the way."""
+    g = MemoryGeometry(num_slices=nsl)
+    n = 256 * nsl
+    base = block * n
+    banks = flat_bank_id(np.arange(base, base + n), g)
+    assert len(np.unique(banks)) == n == g.num_banks
+    # balance across slices and across banks-within-slice is exact here
+    assert np.bincount(banks // g.banks_per_slice,
+                       minlength=nsl).tolist() == [256] * nsl
+
+
+@given(st.integers(min_value=0, max_value=2**14), slices_st)
+@settings(max_examples=25, deadline=None)
+def test_hash_slicing_balances_random_windows_within_tolerance(base, nsl):
+    """Arbitrary (unaligned) windows balance within one granule per slice."""
+    g = MemoryGeometry(num_slices=nsl)
+    n = 8 * g.slice_granule * nsl
+    sl, _ = slice_of_beat(np.arange(base, base + n), g)
+    load = np.bincount(sl, minlength=nsl)
+    assert load.max() - load.min() <= 2 * g.slice_granule
+
+
+@given(st.integers(min_value=1, max_value=64), slices_st)
+@settings(max_examples=20, deadline=None)
+def test_home_slices_and_hops(num_masters, nsl):
+    g = MemoryGeometry(num_slices=nsl, slice_policy="region")
+    home = master_home_slices(num_masters, g)
+    assert home.shape == (num_masters,)
+    assert home.min() >= 0 and home.max() <= nsl - 1
+    assert (np.diff(home) >= 0).all()          # contiguous port groups
+    # a beat in its home slice pays zero hops; ring distance is bounded
+    bps = g.beats_per_slice
+    for m in [0, num_masters - 1]:
+        local = np.arange(home[m] * bps, home[m] * bps + 64)
+        assert (slice_hops(local, home[m], g) == 0).all()
+    hops = slice_hops(np.arange(0, g.beats_total, bps), home[0], g)
+    assert hops.max() <= nsl // 2
+
+
+def test_hash32_is_deterministic_vectorized():
+    a = np.arange(1000, dtype=np.uint32)
+    assert np.array_equal(_hash32(a), _hash32(a.copy()))
