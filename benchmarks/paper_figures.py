@@ -24,15 +24,15 @@ def fig4_throughput(*, num_txns: int = 300, counts=(1, 2, 4, 8, 16)) -> Dict:
         need = int(num_txns * 16 * 1.3) + 2000
         m = simulate(tr, SimParams(max_cycles=need))
         rows[X] = {
-            "read_tput": float(m["read_throughput"][:X].mean()),
-            "write_tput": float(m["write_throughput"][X:].mean()),
+            "read_throughput": float(m["read_throughput"][:X].mean()),
+            "write_throughput": float(m["write_throughput"][X:].mean()),
             "read_lat": float(m["read_lat_avg"][:X].mean()),
             "write_lat": float(m["write_lat_avg"][X:].mean()),
         }
     first, last = rows[counts[0]], rows[counts[-1]]
     # paper: ~96 % read / ~99 % write, droop ≤ ~0.5 pp across the sweep
-    assert last["read_tput"] > 0.93 and last["write_tput"] > 0.97
-    assert abs(first["read_tput"] - last["read_tput"]) < 0.02
+    assert last["read_throughput"] > 0.93 and last["write_throughput"] > 0.97
+    assert abs(first["read_throughput"] - last["read_throughput"]) < 0.02
     return rows
 
 
@@ -72,7 +72,7 @@ def table1_outstanding(*, num_txns: int = 256) -> Dict:
         m = simulate(tr, SimParams(outstanding=o,
                                    max_cycles=num_txns * 20 + 4000))
         rows[o] = {"read_lat": float(m["read_lat_avg"].mean()),
-                   "read_tput": float(m["read_throughput"].mean())}
+                   "read_throughput": float(m["read_throughput"].mean())}
     # paper: 222 vs 36 cycles (≈6×); we require the same regime
     assert 25 <= rows[1]["read_lat"] <= 45
     assert rows[16]["read_lat"] / rows[1]["read_lat"] > 4.5
@@ -90,16 +90,16 @@ def fig67_traces(*, max_txns: int = 1200) -> Dict:
     lat = m["read_lat_avg"]
     lat_max = m["read_lat_max"]
     rows = {
-        "ml_read_tput": float(m["read_throughput"][ml].mean()),
-        "img_read_tput": float(m["read_throughput"][img].mean()),
+        "ml_read_throughput": float(m["read_throughput"][ml].mean()),
+        "img_read_throughput": float(m["read_throughput"][img].mean()),
         "ml_read_lat": float(lat[ml].mean()),
         "img_read_lat": float(lat[img].mean()),
         "ml_lat_spread": float((lat_max[ml] - lat[ml]).mean()),
         "img_lat_spread": float((lat_max[img] - lat[img]).mean()),
-        "write_tput": float(m["write_throughput"][:].mean()),
+        "write_throughput": float(m["write_throughput"][:].mean()),
         "all_done": bool(m["all_done"]),
     }
-    assert rows["ml_read_tput"] > 0.80 and rows["img_read_tput"] > 0.85
+    assert rows["ml_read_throughput"] > 0.80 and rows["img_read_throughput"] > 0.85
     assert rows["ml_lat_spread"] >= rows["img_lat_spread"] * 0.8
     return rows
 
@@ -115,19 +115,19 @@ def comparators(*, payload_kb: int = 128) -> Dict:
         m = simulate(tr, SimParams(banking=banking,
                                    max_cycles=int(beats * 2.6) + 4000))
         rows[banking] = {
-            "read_tput": float(m["read_throughput"][:16].mean()),
+            "read_throughput": float(m["read_throughput"][:16].mean()),
             "read_lat": float(m["read_lat_avg"][:16].mean()),
         }
     # monolithic linear banking serializes a stream on one bank (0.5 b/cyc);
     # the paper's split+fractal dispatch sustains ~1 b/cyc per port
-    assert rows["paper"]["read_tput"] > rows["linear"]["read_tput"] + 0.2
+    assert rows["paper"]["read_throughput"] > rows["linear"]["read_throughput"] + 0.2
     # strided ML traffic hurts no_fractal more (power-of-two restriding)
     tr = adas_mixed_trace(16, max_txns=600)
     for banking in ("paper", "no_fractal"):
         m = simulate(tr, SimParams(banking=banking, max_cycles=30_000))
         rows[f"trace_{banking}"] = {
             "read_lat": float(m["read_lat_avg"][:8].mean()),
-            "read_tput": float(m["read_throughput"][:8].mean())}
+            "read_throughput": float(m["read_throughput"][:8].mean())}
     return rows
 
 

@@ -34,7 +34,7 @@ from typing import Dict
 import numpy as np
 
 from repro.core.simulator import SimParams, Trace, simulate_batch
-from repro.scenarios import compile_scenario, qos_isolation, summarize_point
+from repro.scenarios import qos_isolation
 
 CONFIGS = ("alone", "qos_on", "qos_noreg", "qos_off")
 
@@ -43,7 +43,7 @@ def qos_isolation_sweep(*, txns: int = 64, max_cycles: int = 10_000,
                         bank_occupancy: int = 12, reg_rate: int = 64,
                         reg_burst: int = 32, bound_cycles: int = 24) -> Dict:
     """Safety-class p99 under best-effort saturation, with/without QoS."""
-    comp = compile_scenario(qos_isolation(txns=txns))
+    comp = qos_isolation(txns=txns).compile()
     full = comp.trace
     keep = np.zeros(full.num_masters, bool)
     keep[comp.masters_of_class("safety")] = True
@@ -62,10 +62,10 @@ def qos_isolation_sweep(*, txns: int = 64, max_cycles: int = 10_000,
     for i, (cfg, tr, prm) in enumerate(zip(CONFIGS, traces, prms)):
         metrics = {k: np.asarray(v)[i] for k, v in stacked.items()}
         comp_i = replace(comp, trace=tr)
-        rows[cfg] = summarize_point(comp_i, prm, metrics).summary()
+        rows[cfg] = comp_i.summarize(prm, metrics).summary()
 
     safety = {cfg: rows[cfg]["per_class"]["safety"] for cfg in CONFIGS}
-    be_tput = {cfg: rows[cfg]["per_class"]["besteffort"]["read_tput"]
+    be_tput = {cfg: rows[cfg]["per_class"]["besteffort"]["read_throughput"]
                for cfg in CONFIGS[1:]}
     out = {
         "headline": {
@@ -74,7 +74,7 @@ def qos_isolation_sweep(*, txns: int = 64, max_cycles: int = 10_000,
             "qos_noreg_p99": safety["qos_noreg"]["read_lat_p99"],
             "qos_off_p99": safety["qos_off"]["read_lat_p99"],
             "bound_cycles": bound_cycles,
-            "besteffort_read_tput": be_tput,
+            "besteffort_read_throughput": be_tput,
             "safety_deadline_misses": {
                 cfg: safety[cfg]["deadline_misses"] for cfg in CONFIGS},
         },

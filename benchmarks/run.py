@@ -25,6 +25,7 @@ def main() -> None:
     from benchmarks import paper_figures as F
     from benchmarks.qos_isolation import qos_isolation_sweep
     from benchmarks.scenario_sweep import scenario_sweep
+    from benchmarks.serving_cosim import serving_cosim
     from benchmarks.slice_scaling import slice_scaling_bench
 
     scale = dict(num_txns=1000) if args.full else {}
@@ -49,6 +50,11 @@ def main() -> None:
         ("slice_scaling", lambda: slice_scaling_bench(
             txns=96 if args.full else 64,
             max_cycles=12_000 if args.full else 10_000)),
+        # full mode scales requests, not batch: batch 8 on one slice
+        # self-congests even alone (decode alone overruns 256 banks at
+        # occupancy 32), which is a capacity result, not an isolation one
+        ("serving_cosim", lambda: serving_cosim(
+            num_requests=32 if args.full else 24)),
     ]
     valid = [j[0] for j in jobs]
     if args.list:
@@ -101,6 +107,13 @@ def main() -> None:
         s_path.write_text(json.dumps(
             results["slice_scaling"]["results"], indent=1, default=str))
         print(f"# wrote {s_path}")
+
+    # serving co-sim decode-isolation summary, likewise uploaded by CI
+    if "serving_cosim" in results:
+        v_path = Path("experiments/serving_cosim_summary.json")
+        v_path.write_text(json.dumps(
+            results["serving_cosim"]["results"], indent=1, default=str))
+        print(f"# wrote {v_path}")
 
 
 if __name__ == "__main__":

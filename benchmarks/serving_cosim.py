@@ -1,0 +1,204 @@
+"""Serving co-sim benchmark — the LLM engine's KV traffic on the ADAS fabric.
+
+The question the paper's architecture must answer for a serving workload:
+can decode-class latency (one slot's whole-prefix KV gather, every step) be
+pinned near its alone-latency while prefill DMAs (long slab-write bursts
+under continuous batching) saturate the same banked memory?
+
+Pipeline per (batch size, slice count) group:
+
+  1. ``record_serving_run`` — a real traffic-only :class:`ServingEngine` run
+     (identical control flow to a full model run; recorded stream is
+     deterministic and model-free, both tested) captures the KV-block access
+     stream: prefill slab writes, per-step decode gathers, free/realloc churn.
+  2. ``serving_scenario(record).compile()`` — block→beat placement mirrors
+     ``BankedKVPool.bank_of``; decode slots become ``realtime`` masters,
+     prefill ports ``besteffort`` (regulated) masters sharing the pool span.
+  3. THREE configurations as ONE batched (vmapped) scan:
+       * ``alone``   — decode gathers with prefill silenced (burst=0 rows)
+       * ``qos_on``  — full load, priority arbiter + best-effort regulator
+       * ``qos_off`` — full load, QoS-blind FCFS+RR
+     Banks at ``bank_occupancy=32`` (a slow-SRAM stress corner past the
+     ``qos_isolation`` benchmark's 12: with only ~6 serving ports against
+     256 banks/slice the fabric is otherwise so overprovisioned that the
+     classes never collide — each granted prefill beat must hold its bank
+     long enough that a decode gather landing on it actually waits).  The
+     best-effort regulator is the knob doing the isolating: prefill DMAs
+     are non-preemptive once granted, so priority arbitration alone cannot
+     pin decode — capping in-flight prefill beats (``reg_rate``/
+     ``reg_burst``) can, at the cost of prefill throughput.
+
+Headline assertions: decode-class p99 gather latency with QoS on stays
+within ``bound_cycles`` of alone-latency (and misses no step deadline) in
+EVERY group; at the heaviest-contention corner (max batch, fewest slices)
+it degrades by at least ``margin_cycles`` with QoS off; and adding a slice
+at max batch shrinks the QoS-off damage ≥2× — isolation by priority+
+regulation where the fabric is contended, isolation by capacity as it
+scales out.  I.e. the paper's isolation AND scalability claims hold for
+real recorded serving traffic.
+
+  PYTHONPATH=src python -m benchmarks.serving_cosim
+
+Registered as the ``serving_cosim`` job in ``benchmarks/run.py``; CI smoke
+runs it and uploads ``experiments/serving_cosim_summary.json``.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import replace
+from typing import Dict, Optional, Sequence
+
+import numpy as np
+
+from repro.core.address import MemoryGeometry
+from repro.core.simulator import SimParams, Trace, simulate_batch
+from repro.scenarios import record_serving_run, serving_scenario
+
+CONFIGS = ("alone", "qos_on", "qos_off")
+
+
+def _gather_stats(comp, trace: Trace, metrics: Dict) -> Dict[str, float]:
+    """Per-*gather* service latency for the decode class.
+
+    A decode step is done when the SLOWEST read of its whole-prefix gather
+    returns — the engine can't sample the next token before that — so the
+    latency that matters is per decode event (all reads sharing one master
+    row and start cycle), not per burst.  Tail sensitivity follows: if a
+    fraction p of individual reads is delayed by interference, a k-burst
+    gather is delayed with probability 1-(1-p)^k."""
+    acc = np.asarray(metrics["accept_cycle"])
+    com = np.asarray(metrics["complete_cycle"])
+    iw = np.asarray(trace.is_write)
+    burst = np.asarray(trace.burst)
+    start = trace.start_or_zeros()
+    lats = []
+    for m in [i for i, q in enumerate(comp.qos) if q == "realtime"]:
+        sel = (burst[m] > 0) & (iw[m] == 0) & (com[m] >= 0) & (acc[m] >= 0)
+        for t0 in np.unique(start[m][sel]):
+            grp = sel & (start[m] == t0)
+            lats.append(float(com[m][grp].max() - t0))
+    lats = np.asarray(lats)
+    return {
+        "gathers": int(lats.size),
+        "gather_lat_p50": float(np.percentile(lats, 50)),
+        "gather_lat_p99": float(np.percentile(lats, 99)),
+        "gather_lat_max": float(lats.max()),
+    }
+
+
+def _one_group(*, max_batch: int, num_slices: int, num_requests: int,
+               prompt_lo: int, prompt_hi: int, max_new_tokens: int,
+               cycles_per_step: int, max_cycles: Optional[int],
+               bank_occupancy: int, reg_rate: int, reg_burst: int,
+               seed: int) -> Dict:
+    """Record one engine run and evaluate its three fabric configs."""
+    rec = record_serving_run(
+        num_requests=num_requests, max_batch=max_batch,
+        max_len=prompt_hi + max_new_tokens + 16,
+        prompt_lo=prompt_lo, prompt_hi=prompt_hi,
+        max_new_tokens=max_new_tokens, seed=seed)
+    if max_cycles is None:
+        # the run spans rec.steps engine steps; leave tail room for the
+        # last gathers (and their contention) to drain
+        max_cycles = (rec.steps + 16) * cycles_per_step
+    geom = MemoryGeometry(num_slices=num_slices)
+    sc = serving_scenario(rec, geom=geom, cycles_per_step=cycles_per_step,
+                          decode_deadline=4 * cycles_per_step)
+    comp = sc.compile()
+    full = comp.trace
+    decode = np.array([q == "realtime" for q in comp.qos])
+    alone = Trace(full.is_write,
+                  np.where(decode[:, None], full.burst, 0).astype(np.int32),
+                  full.addr, full.start, full.prio)
+    blind = Trace(full.is_write, full.burst, full.addr, full.start, None)
+
+    base = SimParams(geom=geom, max_cycles=max_cycles,
+                     bank_occupancy=bank_occupancy)
+    qos_on = replace(base, reg_rate=reg_rate, reg_burst=reg_burst)
+    traces = [alone, full, blind]
+    prms = [qos_on, qos_on, base]
+    stacked = simulate_batch(traces, prms)          # ONE compiled vmapped scan
+
+    rows, gathers = {}, {}
+    for i, (cfg, tr, prm) in enumerate(zip(CONFIGS, traces, prms)):
+        metrics = {k: np.asarray(v)[i] for k, v in stacked.items()}
+        rows[cfg] = replace(comp, trace=tr).summarize(prm, metrics).summary()
+        gathers[cfg] = _gather_stats(comp, tr, metrics)
+
+    dec = {cfg: rows[cfg]["per_class"]["realtime"] for cfg in CONFIGS}
+    return {
+        "record": rec.summary(),
+        "decode_gather_p99": {cfg: gathers[cfg]["gather_lat_p99"]
+                              for cfg in CONFIGS},
+        "decode_gather_max": {cfg: gathers[cfg]["gather_lat_max"]
+                              for cfg in CONFIGS},
+        "decode_read_p99": {cfg: dec[cfg]["read_lat_p99"] for cfg in CONFIGS},
+        "decode_deadline_misses": {cfg: dec[cfg]["deadline_misses"]
+                                   for cfg in CONFIGS},
+        "prefill_write_throughput": {
+            cfg: rows[cfg]["per_class"]["besteffort"]["write_throughput"]
+            for cfg in CONFIGS[1:]},
+        "gathers": gathers,
+        "rows": rows,
+    }
+
+
+def serving_cosim(*, batch_sizes: Sequence[int] = (2, 4),
+                  slice_counts: Sequence[int] = (1, 2),
+                  num_requests: int = 24, prompt_lo: int = 48,
+                  prompt_hi: int = 96, max_new_tokens: int = 8,
+                  cycles_per_step: int = 192,
+                  max_cycles: Optional[int] = None,
+                  bank_occupancy: int = 32, reg_rate: int = 8,
+                  reg_burst: int = 8, bound_cycles: int = 64,
+                  margin_cycles: int = 64, seed: int = 0) -> Dict:
+    """Decode-class p99 isolation across a (batch, slices) grid."""
+    groups = {}
+    for b in batch_sizes:
+        for s in slice_counts:
+            groups[f"batch{b}_slices{s}"] = _one_group(
+                max_batch=b, num_slices=s, num_requests=num_requests,
+                prompt_lo=prompt_lo, prompt_hi=prompt_hi,
+                max_new_tokens=max_new_tokens,
+                cycles_per_step=cycles_per_step, max_cycles=max_cycles,
+                bank_occupancy=bank_occupancy, reg_rate=reg_rate,
+                reg_burst=reg_burst, seed=seed)
+
+    headline = {
+        g: {"alone_p99": r["decode_gather_p99"]["alone"],
+            "qos_on_p99": r["decode_gather_p99"]["qos_on"],
+            "qos_off_p99": r["decode_gather_p99"]["qos_off"],
+            "qos_off_degradation": r["decode_gather_p99"]["qos_off"]
+            - r["decode_gather_p99"]["alone"]}
+        for g, r in groups.items()}
+    heavy = f"batch{max(batch_sizes)}_slices{min(slice_counts)}"
+    out = {"headline": headline, "heavy_group": heavy,
+           "bound_cycles": bound_cycles, "margin_cycles": margin_cycles,
+           "groups": groups}
+    for g, h in headline.items():
+        # decode p99 pinned near alone-latency with the QoS machinery on …
+        assert h["qos_on_p99"] <= h["alone_p99"] + bound_cycles, (g, h)
+        # … and every gather made its step deadline under QoS
+        assert groups[g]["decode_deadline_misses"]["qos_on"] == 0, (g, h)
+    # at the heaviest-contention corner (max batch, fewest slices), QoS-blind
+    # FCFS+RR measurably damages the decode tail — light groups legitimately
+    # show no damage because the fabric absorbs them, which is itself part of
+    # the result, not a failed experiment
+    hh = headline[heavy]
+    assert hh["qos_off_p99"] >= hh["qos_on_p99"] + margin_cycles, (heavy, hh)
+    # and the paper's scalability claim: adding a slice shrinks the QoS-off
+    # damage even WITHOUT the QoS machinery (isolation by capacity)
+    if len(slice_counts) > 1:
+        b, s_lo, s_hi = max(batch_sizes), min(slice_counts), max(slice_counts)
+        deg = {s: headline[f"batch{b}_slices{s}"]["qos_off_degradation"]
+               for s in (s_lo, s_hi)}
+        assert deg[s_hi] <= deg[s_lo] / 2, deg
+    return out
+
+
+def main() -> None:
+    print(json.dumps(serving_cosim(), indent=1, default=str))
+
+
+if __name__ == "__main__":
+    main()

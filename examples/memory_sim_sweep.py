@@ -9,7 +9,7 @@ from repro.core.traffic import bulk_linear, random_uniform
 
 
 def main():
-    print("masters read_tput write_tput read_lat write_lat   (Fig. 4)")
+    print("masters read_throughput write_throughput read_lat write_lat   (Fig. 4)")
     for X in (1, 2, 4, 8, 16):
         tr = random_uniform(X, 200, burst=16, full_duplex=True)
         m = simulate(tr, SimParams(max_cycles=6000))
@@ -21,7 +21,7 @@ def main():
     for banking in ("paper", "no_fractal", "linear"):
         tr = bulk_linear(16, 64 * 1024, burst=16)
         m = simulate(tr, SimParams(banking=banking, max_cycles=12_000))
-        print(f"  {banking:12s} read_tput={m['read_throughput'].mean():.3f}")
+        print(f"  {banking:12s} read_throughput={m['read_throughput'].mean():.3f}")
 
 
 if __name__ == "__main__":

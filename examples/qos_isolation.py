@@ -13,8 +13,7 @@ import json
 
 from repro.core.qos import interference_report
 from repro.core.simulator import SimParams, Trace
-from repro.scenarios import (SweepPoint, compile_scenario, qos_isolation,
-                             run_sweep)
+from repro.scenarios import SweepPoint, qos_isolation, run_sweep
 
 TXNS = 48
 SLOW_SRAM = dict(bank_occupancy=12, max_cycles=8000)  # congested corner
@@ -37,11 +36,11 @@ def main() -> None:
             "safety_read_p99": safety["read_lat_p99"],
             "safety_deadline_misses": safety["deadline_misses"],
             "besteffort_done": f"{best['txns_done']}/{best['txns_total']}",
-            "besteffort_read_tput": best["read_tput"],
+            "besteffort_read_throughput": best["read_throughput"],
         }, indent=1, default=str))
 
     # victim-alone vs victim-under-load, one batched call
-    comp = compile_scenario(sc)
+    comp = sc.compile()
     full = comp.trace
     victim = Trace(full.is_write[:1], full.burst[:1], full.addr[:1],
                    None if full.start is None else full.start[:1],

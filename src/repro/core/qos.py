@@ -10,7 +10,7 @@ Two layers of checking:
 """
 from __future__ import annotations
 
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -49,17 +49,24 @@ def touched_intervals(addr: np.ndarray, burst: np.ndarray
 
 
 def regions_isolated(trace: Trace,
-                     geom: MemoryGeometry = MemoryGeometry()) -> bool:
+                     geom: MemoryGeometry = MemoryGeometry(),
+                     groups: Optional[Sequence[int]] = None) -> bool:
     """True iff no two masters touch the same *address* (the paper's
     "accessing memory spaces don't have any overlap" requirement).
 
     Compares the actual touched beat intervals, not per-master bounding
     boxes — interleaved-but-disjoint address sets (e.g. two ring buffers
-    sharing a span) are correctly reported as isolated."""
+    sharing a span) are correctly reported as isolated.
+
+    ``groups`` (one label per master) collapses masters with equal labels
+    into one logical master: overlap *within* a group is allowed.  Serving
+    co-sim ports that legitimately share a KV-pool span declare a
+    ``share_group`` in the scenario DSL, which flows here."""
     tagged = []
     for m in range(trace.num_masters):
+        label = m if groups is None else groups[m]
         for lo, hi in touched_intervals(trace.addr[m], trace.burst[m]):
-            tagged.append((lo, hi, m))
+            tagged.append((lo, hi, label))
     tagged.sort()
     # sorted by lo, any overlapping pair involves the running-max interval
     cur_hi, cur_m = -1, -1

@@ -1,25 +1,33 @@
 """Declarative ADAS scenario engine (paper §II-C, Figs. 6–7).
 
-A :class:`~repro.scenarios.spec.Scenario` composes per-master traffic models
+A :class:`~repro.scenarios.spec.Scenario` composes per-master traffic sources
 (camera frame DMA, Radar chirps, Lidar scatter, AI-accelerator tiles, CPU
-scatter) with QoS classes, memory-region placement, and injection rates, and
-compiles down to the simulator's ``Trace`` format.  ``scenarios.sweep`` runs a
-grid of scenario × parameter points as one compiled ``vmap``-ed scan.
+scatter — or recorded LLM-serving streams) with QoS classes, memory-region
+placement, and injection rates.  Every workload goes through one interface:
+``TrafficSource.emit → Scenario.compile() → CompiledScenario.simulate`` (or
+``.simulate_batch`` for a parameter grid as one compiled ``vmap``-ed scan);
+``scenarios.sweep.run_sweep`` does the same for scenario × parameter grids.
 """
 from repro.scenarios.spec import (CompiledScenario, MasterSpec, Scenario,
+                                  SyntheticSource, TrafficSource,
                                   QOS_CLASSES, QOS_PRIORITY, compile_scenario)
 from repro.scenarios.generators import GENERATORS
 from repro.scenarios.library import (highway_pilot, parking_surround,
                                      preset_scenarios, qos_isolation,
                                      sensor_stress, slice_scaling,
                                      urban_perception)
-from repro.scenarios.sweep import (SweepPoint, SweepResult, run_sweep,
-                                   summarize_point)
+from repro.scenarios.serving import ServingSource, serving_scenario
+from repro.scenarios.sweep import (DEPRECATED_METRIC_KEYS, MetricAliasDict,
+                                   SweepPoint, SweepResult, run_sweep,
+                                   summarize_compiled, summarize_point)
+from repro.serving.record import record_serving_run
 
 __all__ = [
-    "CompiledScenario", "MasterSpec", "Scenario", "QOS_CLASSES",
-    "QOS_PRIORITY", "compile_scenario", "GENERATORS", "SweepPoint",
-    "SweepResult", "run_sweep", "summarize_point", "highway_pilot",
-    "parking_surround", "preset_scenarios", "qos_isolation", "sensor_stress",
-    "slice_scaling", "urban_perception",
+    "CompiledScenario", "MasterSpec", "Scenario", "SyntheticSource",
+    "TrafficSource", "QOS_CLASSES", "QOS_PRIORITY", "compile_scenario",
+    "GENERATORS", "DEPRECATED_METRIC_KEYS", "MetricAliasDict", "SweepPoint",
+    "SweepResult", "run_sweep", "summarize_compiled", "summarize_point",
+    "ServingSource", "serving_scenario", "record_serving_run",
+    "highway_pilot", "parking_surround", "preset_scenarios", "qos_isolation",
+    "sensor_stress", "slice_scaling", "urban_perception",
 ]

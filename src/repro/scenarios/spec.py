@@ -1,11 +1,28 @@
 """Declarative scenario spec → simulator ``Trace`` compiler.
 
-A :class:`Scenario` is a list of :class:`MasterSpec`s — traffic model, QoS
+A :class:`Scenario` is a list of :class:`MasterSpec`s — traffic source, QoS
 class, memory-region placement, injection rate — plus a shared geometry.
-``compile_scenario`` resolves region placement (explicit beat ranges or an
+``Scenario.compile()`` resolves region placement (explicit beat ranges or an
 automatic equal partition of the address space), invokes each master's
-generator, and pads the rows into one beat-aligned ``Trace`` whose ``start``
-column carries the injection timing.
+:class:`TrafficSource`, and pads the rows into one beat-aligned ``Trace``
+whose ``start`` column carries the injection timing.  The resulting
+:class:`CompiledScenario` runs itself: ``.simulate(params)`` for one point,
+``.simulate_batch(params_seq)`` for a parameter grid as one vmapped scan.
+
+Every workload reaches the simulator through the same interface::
+
+    TrafficSource.emit(lo, hi, ...) → Scenario.compile() → .simulate(params)
+
+A ``TrafficSource`` is anything with an ``emit`` method returning one
+master's ``(is_write, burst, addr, start)`` rows: the synthetic ADAS
+generators (wrapped by :class:`SyntheticSource`; a plain string model name in
+``MasterSpec.model`` still works and resolves to one), and recorded
+LLM-serving streams (``repro.scenarios.serving.ServingSource``).  Sources
+that replay a recorded stream may ignore the synthetic knobs (``txns``,
+``rate``, ``seed``) — their stream is already fully determined.
+
+``compile_scenario(sc)`` remains as a thin deprecated alias for
+``sc.compile()``.
 
 The QoS classes mirror the paper's §II-C contract:
 
@@ -16,17 +33,49 @@ The QoS classes mirror the paper's §II-C contract:
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import (TYPE_CHECKING, Dict, List, Optional, Protocol, Sequence,
+                    Tuple, Union, runtime_checkable)
 
 import numpy as np
 
 from repro.core.address import MemoryGeometry, master_home_slices
-from repro.core.simulator import PRIO_LEVELS, Trace
+from repro.core.simulator import PRIO_LEVELS, SimParams, Trace
 from repro.core.traffic import pad_rows
 from repro.scenarios.generators import GENERATORS
 
+if TYPE_CHECKING:
+    from repro.scenarios.sweep import SweepResult
+
 QOS_CLASSES = ("safety", "realtime", "besteffort")
+
+
+@runtime_checkable
+class TrafficSource(Protocol):
+    """One master port's traffic emitter — the unified workload interface.
+
+    ``emit`` returns the port's transaction stream as four parallel 1-D int32
+    arrays ``(is_write, burst, addr, start)`` with every burst inside
+    ``[lo, hi)``.  ``txns``/``rate``/``seed``/``params`` are the synthetic
+    knobs from the owning :class:`MasterSpec`; replay-style sources (recorded
+    serving streams) may ignore them.
+    """
+
+    def emit(self, lo: int, hi: int, *, txns: int, rate: float, seed: int,
+             params: Dict) -> Tuple[np.ndarray, ...]:
+        ...
+
+
+@dataclass(frozen=True)
+class SyntheticSource:
+    """Adapter presenting a named synthetic generator as a TrafficSource."""
+    model: str
+
+    def emit(self, lo: int, hi: int, *, txns: int, rate: float, seed: int,
+             params: Dict) -> Tuple[np.ndarray, ...]:
+        return GENERATORS[self.model](lo, hi, txns=txns, rate=rate,
+                                      seed=seed, params=params)
 
 #: arbitration priority level per QoS class (0 = most critical; masters at
 #: level >= REGULATED_PRIO are subject to the token-bucket regulator)
@@ -40,7 +89,7 @@ MIN_REGION_BEATS = 256
 @dataclass
 class MasterSpec:
     """One master port's workload."""
-    model: str                                # key into GENERATORS
+    model: Union[str, TrafficSource]          # GENERATORS key or a source
     qos: str = "besteffort"                   # one of QOS_CLASSES
     rate: float = 1.0                         # injection cap, beats/cycle
     txns: int = 256                           # transactions to generate
@@ -54,6 +103,18 @@ class MasterSpec:
                                               # this slice's span (requires
                                               # geom.slice_policy="region"
                                               # on a multi-slice fabric)
+    share_group: Optional[str] = None         # masters naming the same group
+                                              # may declare overlapping
+                                              # regions (e.g. serving ports
+                                              # sharing one KV pool); the
+                                              # isolation report treats the
+                                              # group as one logical master
+
+    def source(self) -> TrafficSource:
+        """The TrafficSource this spec resolves to (strings → synthetic)."""
+        if isinstance(self.model, str):
+            return SyntheticSource(self.model)
+        return self.model
 
     def effective_priority(self) -> int:
         """Arbitration level this master presents to the simulator."""
@@ -62,9 +123,15 @@ class MasterSpec:
         return QOS_PRIORITY[self.qos]
 
     def validate(self) -> None:
-        if self.model not in GENERATORS:
-            raise ValueError(f"unknown traffic model {self.model!r}; "
-                             f"have {sorted(GENERATORS)}")
+        if isinstance(self.model, str):
+            if self.model not in GENERATORS:
+                raise ValueError(f"unknown traffic model {self.model!r}; "
+                                 f"have {sorted(GENERATORS)} (or pass a "
+                                 "TrafficSource instance)")
+        elif not isinstance(self.model, TrafficSource):
+            raise ValueError(
+                f"model must be a GENERATORS key or a TrafficSource (needs "
+                f"an emit method); got {type(self.model).__name__}")
         if self.qos not in QOS_CLASSES:
             raise ValueError(f"unknown QoS class {self.qos!r}; "
                              f"have {QOS_CLASSES}")
@@ -116,23 +183,57 @@ class Scenario:
                 continue
             _check_region_bounds(i, m.region, self.geom)
             for j, other in claimed:
+                shared = (m.share_group is not None
+                          and self.masters[j].share_group == m.share_group)
+                if shared:
+                    continue    # same share group: overlap is the point
                 if m.region[0] < other[1] and other[0] < m.region[1]:
                     raise ValueError(
                         f"masters {j} and {i} claim overlapping regions "
                         f"{other} and {m.region} — the DSL's isolation "
-                        "contract requires disjoint placement")
+                        "contract requires disjoint placement (masters may "
+                        "opt into sharing via a common share_group)")
             claimed.append((i, m.region))
+
+    def compile(self) -> "CompiledScenario":
+        """Lower this scenario to a padded, beat-aligned ``Trace``."""
+        self.validate()
+        regions = resolve_regions(self)
+        rows_iw, rows_b, rows_a, rows_s = [], [], [], []
+        for i, (m, (lo, hi)) in enumerate(zip(self.masters, regions)):
+            iw, b, a, s = m.source().emit(lo, hi, txns=m.txns, rate=m.rate,
+                                          seed=m.seed + 7919 * i,
+                                          params=m.params)
+            rows_iw.append(iw)
+            rows_b.append(b)
+            rows_a.append(a)
+            rows_s.append(s)
+        n = max(len(r) for r in rows_iw)
+        prios = [m.effective_priority() for m in self.masters]
+        trace = Trace(pad_rows(rows_iw, n), pad_rows(rows_b, n),
+                      pad_rows(rows_a, n), pad_rows(rows_s, n),
+                      np.asarray(prios, np.int32))
+        return CompiledScenario(self, trace, regions,
+                                [m.qos for m in self.masters], prios,
+                                [m.deadline for m in self.masters],
+                                [m.share_group for m in self.masters])
 
 
 @dataclass
 class CompiledScenario:
-    """A scenario lowered to the simulator's input format."""
+    """A scenario lowered to the simulator's input format.
+
+    A compiled scenario runs itself: :meth:`simulate` evaluates one parameter
+    point, :meth:`simulate_batch` a whole parameter grid as ONE compiled
+    vmapped scan — the workload→result path every benchmark goes through.
+    """
     scenario: Scenario
     trace: Trace
     regions: List[Tuple[int, int]]            # resolved [lo, hi) per master
     qos: List[str]                            # per-master class
     priorities: Optional[List[int]] = None    # per-master arbiter level
     deadlines: Optional[List[Optional[int]]] = None  # per-master, cycles
+    share_groups: Optional[List[Optional[str]]] = None  # per-master group
 
     @property
     def classes(self) -> List[str]:
@@ -141,6 +242,22 @@ class CompiledScenario:
     def masters_of_class(self, cls: str) -> np.ndarray:
         return np.array([i for i, c in enumerate(self.qos) if c == cls],
                         np.int32)
+
+    def simulate(self, params: SimParams = SimParams()) -> "SweepResult":
+        """Run this scenario at one parameter point and summarize it."""
+        return self.simulate_batch([params])[0]
+
+    def simulate_batch(self, params: Sequence[SimParams], *,
+                       batched: bool = True) -> List["SweepResult"]:
+        """Run one trace × many parameter points (one vmapped scan when
+        ``batched``); see ``scenarios.sweep.run_sweep`` for scenario grids."""
+        from repro.scenarios.sweep import simulate_compiled
+        return simulate_compiled(self, params, batched=batched)
+
+    def summarize(self, params: SimParams, metrics) -> "SweepResult":
+        """Per-class/isolation/slice summary of one point's raw metrics."""
+        from repro.scenarios.sweep import summarize_compiled
+        return summarize_compiled(self, params, metrics)
 
 
 def _check_region_bounds(i: int, region: Tuple[int, int],
@@ -241,23 +358,7 @@ def resolve_regions(scenario: Scenario) -> List[Tuple[int, int]]:
 
 
 def compile_scenario(scenario: Scenario) -> CompiledScenario:
-    """Lower a scenario to a padded, beat-aligned ``Trace``."""
-    scenario.validate()
-    regions = resolve_regions(scenario)
-    rows_iw, rows_b, rows_a, rows_s = [], [], [], []
-    for i, (m, (lo, hi)) in enumerate(zip(scenario.masters, regions)):
-        gen = GENERATORS[m.model]
-        iw, b, a, s = gen(lo, hi, txns=m.txns, rate=m.rate,
-                          seed=m.seed + 7919 * i, params=m.params)
-        rows_iw.append(iw)
-        rows_b.append(b)
-        rows_a.append(a)
-        rows_s.append(s)
-    n = max(len(r) for r in rows_iw)
-    prios = [m.effective_priority() for m in scenario.masters]
-    trace = Trace(pad_rows(rows_iw, n), pad_rows(rows_b, n),
-                  pad_rows(rows_a, n), pad_rows(rows_s, n),
-                  np.asarray(prios, np.int32))
-    return CompiledScenario(scenario, trace, regions,
-                            [m.qos for m in scenario.masters], prios,
-                            [m.deadline for m in scenario.masters])
+    """Deprecated alias for :meth:`Scenario.compile`."""
+    warnings.warn("compile_scenario(sc) is deprecated; use sc.compile()",
+                  DeprecationWarning, stacklevel=2)
+    return scenario.compile()

@@ -7,13 +7,40 @@ traced per-point vector, and a single compiled call produces every point's
 metrics.  ``batched=False`` runs the identical padded inputs through
 sequential :func:`~repro.core.simulator.simulate` calls — the two paths are
 bit-for-bit equal (tested), so the batched path is a pure speed feature.
+``CompiledScenario.simulate``/``simulate_batch`` (one scenario, N parameter
+points) are the single-workload face of the same machinery.
 
-Per-point reporting (``summarize_point``) gives the paper's QoS view:
-latency percentiles per QoS class and isolation violations (region overlap +
-cross-class shared sub-banks) via ``core.qos``.
+Canonical metric-key schema
+---------------------------
+Per-class stats use ONE naming convention, shared verbatim with the raw
+simulator metrics dict::
+
+    {dir}_{metric}
+
+  * ``dir``      — ``read`` | ``write`` (AXI R/W channels are independent;
+                   their completions have different semantics and are never
+                   mixed in one statistic)
+  * ``metric``   — ``throughput`` (beats/cycle over the port's wall span),
+                   ``throughput_busy`` (beats/cycle over busy cycles only),
+                   ``lat_p50``/``lat_p95``/``lat_p99``/``lat_max``
+                   (acceptance→completion), and the ``e2e_lat_*`` family
+                   (earliest-issue→completion)
+
+plus the direction-free bookkeeping keys (``masters``, ``txns_done``,
+``txns_total``, ``deadline_txns``, ``deadline_misses``,
+``deadline_miss_rate``).  The pre-schema spellings (``read_tput``,
+``write_tput``) remain readable through :class:`MetricAliasDict` but emit a
+``DeprecationWarning``; no in-repo benchmark or test reads them.
+
+Per-point reporting (``CompiledScenario.summarize``) gives the paper's QoS
+view: latency percentiles per QoS class and isolation violations (region
+overlap + cross-class shared sub-banks) via ``core.qos``; masters that opt
+into a common ``share_group`` (serving ports over one KV pool) are treated
+as one logical master by both isolation checks.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field, replace
 from typing import Dict, List, Optional, Sequence
 
@@ -24,9 +51,40 @@ from repro.core.qos import regions_isolated, touched_subbanks
 from repro.core.simulator import (SimParams, batch_envelope, simulate,
                                   simulate_batch)
 from repro.core.traffic import pad_trace
-from repro.scenarios.spec import CompiledScenario, Scenario, compile_scenario
+from repro.scenarios.spec import CompiledScenario, Scenario
 
 PERCENTILES = (50, 95, 99)
+
+#: deprecated per-class metric keys → their canonical names
+DEPRECATED_METRIC_KEYS = {
+    "read_tput": "read_throughput",
+    "write_tput": "write_throughput",
+}
+
+
+class MetricAliasDict(dict):
+    """Per-class stats dict: deprecated keys still resolve (to their
+    canonical entry) but emit a ``DeprecationWarning``."""
+
+    def __missing__(self, key):
+        canon = DEPRECATED_METRIC_KEYS.get(key)
+        if canon is None or canon not in self:
+            raise KeyError(key)
+        warnings.warn(f"metric key {key!r} is deprecated; read {canon!r}",
+                      DeprecationWarning, stacklevel=2)
+        return dict.__getitem__(self, canon)
+
+    def get(self, key, default=None):
+        try:
+            return self[key]
+        except KeyError:
+            return default
+
+    def __contains__(self, key):
+        if dict.__contains__(self, key):
+            return True
+        canon = DEPRECATED_METRIC_KEYS.get(key)
+        return canon is not None and dict.__contains__(self, canon)
 
 
 @dataclass
@@ -85,8 +143,10 @@ def _class_stats(compiled: CompiledScenario,
     X = trace.num_masters
     deadlines = compiled.deadlines or [None] * X
     dl = np.array([-1 if d is None else int(d) for d in deadlines])
-    r_tput = np.asarray(metrics["read_throughput"])
-    w_tput = np.asarray(metrics["write_throughput"])
+    tput = {d: np.asarray(metrics[f"{d}_throughput"])
+            for d in ("read", "write")}
+    tput_busy = {d: np.asarray(metrics[f"{d}_throughput_busy"])
+                 for d in ("read", "write")}
 
     def pctl_block(stats, prefix, sel, values=lat):
         vals = values[sel]
@@ -101,17 +161,21 @@ def _class_stats(compiled: CompiledScenario,
         rows = compiled.masters_of_class(cls)
         sel = np.zeros_like(done)
         sel[rows] = done[rows]
-        stats: Dict[str, float] = {
+        stats: Dict[str, float] = MetricAliasDict({
             "masters": int(len(rows)),
             "txns_done": int(sel.sum()),
             "txns_total": int(real[rows].sum()),
-        }
-        has_r = (real[rows] & (iw[rows] == 0)).any(axis=1)
-        has_w = (real[rows] & (iw[rows] == 1)).any(axis=1)
-        stats["read_tput"] = (float(r_tput[rows][has_r].mean())
-                              if has_r.any() else float("nan"))
-        stats["write_tput"] = (float(w_tput[rows][has_w].mean())
-                               if has_w.any() else float("nan"))
+        })
+        issued = {"read": (real[rows] & (iw[rows] == 0)).any(axis=1),
+                  "write": (real[rows] & (iw[rows] == 1)).any(axis=1)}
+        for d in ("read", "write"):
+            has = issued[d]
+            stats[f"{d}_throughput"] = (
+                float(tput[d][rows][has].mean()) if has.any()
+                else float("nan"))
+            stats[f"{d}_throughput_busy"] = (
+                float(tput_busy[d][rows][has].mean()) if has.any()
+                else float("nan"))
         pctl_block(stats, "read", sel & (iw == 0))
         pctl_block(stats, "write", sel & (iw == 1))
         pctl_block(stats, "read_e2e", sel & (iw == 0), lat_e2e)
@@ -130,18 +194,35 @@ def _class_stats(compiled: CompiledScenario,
     return out
 
 
+def _share_labels(compiled: CompiledScenario, num_masters: int) -> List[int]:
+    """Isolation-group label per trace row: masters naming the same
+    ``share_group`` collapse to one label; everyone else (and inert padding
+    rows past the compiled master list) is its own group."""
+    groups = compiled.share_groups or []
+    gid: Dict[object, int] = {}
+    labels = []
+    for m in range(num_masters):
+        g = groups[m] if m < len(groups) else None
+        key = ("g", g) if g is not None else ("m", m)
+        labels.append(gid.setdefault(key, len(gid)))
+    return labels
+
+
 def _isolation_report(compiled: CompiledScenario) -> Dict[str, object]:
     """Static isolation checks: do declared regions overlap, and do masters
-    of *different* QoS classes share (bank, sub-bank) granules?"""
+    of *different* QoS classes share (bank, sub-bank) granules?  Share-group
+    members count as one logical master for both checks."""
     trace = compiled.trace
-    ok = regions_isolated(trace, compiled.scenario.geom)
+    labels = _share_labels(compiled, trace.num_masters)
+    ok = regions_isolated(trace, compiled.scenario.geom, groups=labels)
     owners: Dict[int, int] = {}
     cross = 0
     for m in range(trace.num_masters):
         for g in touched_subbanks(trace.addr[m], trace.burst[m],
                                   compiled.scenario.geom):
             prev = owners.setdefault(int(g), m)
-            if prev != m and compiled.qos[prev] != compiled.qos[m]:
+            if prev != m and labels[prev] != labels[m] \
+                    and compiled.qos[prev] != compiled.qos[m]:
                 cross += 1
     return {"regions_isolated": bool(ok),
             "cross_class_shared_subbanks": int(cross)}
@@ -182,12 +263,39 @@ def _slice_report(compiled: CompiledScenario,
     }
 
 
-def summarize_point(compiled: CompiledScenario, params: SimParams,
-                    metrics: Dict[str, np.ndarray]) -> SweepResult:
+def summarize_compiled(compiled: CompiledScenario, params: SimParams,
+                       metrics: Dict[str, np.ndarray]) -> SweepResult:
+    """Implementation behind :meth:`CompiledScenario.summarize`."""
     return SweepResult(compiled.scenario.name, params, metrics,
                        _class_stats(compiled, metrics),
                        _isolation_report(compiled),
                        _slice_report(compiled, metrics))
+
+
+def summarize_point(compiled: CompiledScenario, params: SimParams,
+                    metrics: Dict[str, np.ndarray]) -> SweepResult:
+    """Deprecated alias for :meth:`CompiledScenario.summarize`."""
+    warnings.warn("summarize_point(c, p, m) is deprecated; use "
+                  "c.summarize(p, m)", DeprecationWarning, stacklevel=2)
+    return summarize_compiled(compiled, params, metrics)
+
+
+def simulate_compiled(compiled: CompiledScenario, prms: Sequence[SimParams],
+                      *, batched: bool = True) -> List[SweepResult]:
+    """One compiled scenario × many parameter points (the implementation
+    behind ``CompiledScenario.simulate``/``simulate_batch``)."""
+    if not prms:
+        return []
+    env = batch_envelope(list(prms))
+    pinned = [replace(p, slots_override=env.slots_per_master) for p in prms]
+    if batched and len(pinned) > 1:
+        stacked = simulate_batch([compiled.trace] * len(pinned), pinned)
+        per_point = [{k: np.asarray(v)[i] for k, v in stacked.items()}
+                     for i in range(len(pinned))]
+    else:
+        per_point = [simulate(compiled.trace, p) for p in pinned]
+    return [summarize_compiled(compiled, p, met)
+            for p, met in zip(pinned, per_point)]
 
 
 def run_sweep(points: Sequence[SweepPoint], *,
@@ -203,10 +311,10 @@ def run_sweep(points: Sequence[SweepPoint], *,
     """
     if not points:
         return []
-    compiled = [compile_scenario(p.scenario) for p in points]
+    compiled = [p.scenario.compile() for p in points]
     env_pts = list(points) if envelope is None else list(envelope)
     env_compiled = (compiled if envelope is None
-                    else [compile_scenario(p.scenario) for p in env_pts])
+                    else [p.scenario.compile() for p in env_pts])
     X = max(c.trace.num_masters for c in env_compiled + compiled)
     N = max(c.trace.num_txns for c in env_compiled + compiled)
     padded = [pad_trace(c.trace, X, N) for c in compiled]
@@ -228,6 +336,6 @@ def run_sweep(points: Sequence[SweepPoint], *,
         # inert (burst 0) and the padded trace preserves row order
         comp_for_stats = CompiledScenario(comp.scenario, pad, comp.regions,
                                           comp.qos, comp.priorities,
-                                          comp.deadlines)
-        out.append(summarize_point(comp_for_stats, prm, met))
+                                          comp.deadlines, comp.share_groups)
+        out.append(summarize_compiled(comp_for_stats, prm, met))
     return out

@@ -40,23 +40,42 @@ class Request:
 
 
 class ServingEngine:
-    def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 4,
-                 max_len: int = 128, block_size: int = 16,
-                 greedy: bool = True):
+    """``params=None`` runs the engine *traffic-only*: identical admission,
+    pool-placement, decode-cadence, and free/realloc control flow, but no
+    model math (the access stream never depends on logits — completion is
+    governed by ``max_new_tokens`` — so the recorded KV traffic is identical
+    to a full run's; tested).  Attach a
+    :class:`~repro.serving.record.KVAccessRecorder` via ``recorder=`` to
+    capture the stream for the fabric co-sim."""
+
+    def __init__(self, cfg: Optional[ModelConfig], params, *,
+                 max_batch: int = 4, max_len: int = 128, block_size: int = 16,
+                 greedy: bool = True, recorder=None):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
         self.block_size = block_size
+        self.recorder = recorder
         nblocks = max(1, max_batch * max_len // block_size * 2)
         nblocks = -(-nblocks // 8) * 8  # round to bank multiple
         self.pool = BankedKVPool(num_blocks=nblocks, block_size=block_size,
-                                 num_banks=8)
-        self.cache = M.init_cache(cfg, max_batch, M.cache_length(cfg, max_len))
+                                 num_banks=8, recorder=recorder)
+        if recorder is not None:
+            recorder.bind_pool(nblocks, block_size, self.pool.num_banks,
+                               max_batch)
         self.slot_req: List[Optional[Request]] = [None] * max_batch
         self.slot_pos = np.zeros(max_batch, np.int64)
         self.queue: List[Request] = []
         self._rr = 0
+        self._next_rid = 0
+        self.steps = 0
+
+        if params is None:          # traffic-only: no cache, no compiled step
+            self.cache = None
+            self._decode = None
+            return
+        self.cache = M.init_cache(cfg, max_batch, M.cache_length(cfg, max_len))
 
         def _decode(params, cache, tokens, pos):
             return M.decode_step(cfg, params, cache, tokens, pos)
@@ -64,8 +83,11 @@ class ServingEngine:
 
     # ---- API ----
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16) -> Request:
-        r = Request(rid=len(self.queue) + 1000, prompt=np.asarray(prompt),
+        # monotonic rid: queue-length-derived ids collide once submission
+        # interleaves with draining, and the pool/recorder key streams by rid
+        r = Request(rid=1000 + self._next_rid, prompt=np.asarray(prompt),
                     max_new_tokens=max_new_tokens)
+        self._next_rid += 1
         self.queue.append(r)
         return r
 
@@ -86,6 +108,14 @@ class ServingEngine:
 
     def _prefill_into_slot(self, slot: int, r: Request) -> None:
         S = len(r.prompt)
+        if self.params is None:     # traffic-only: control flow without math
+            r.out_tokens.append(0)
+            self.slot_req[slot] = r
+            self.slot_pos[slot] = S
+            if self.recorder is not None:
+                self.recorder.on_prefill(slot, r.rid, S,
+                                         self.pool.by_request[r.rid])
+            return
         cfg = self.cfg
         batch = {"tokens": jnp.asarray(r.prompt, jnp.int32)[None]}
         if cfg.is_encoder_decoder:
@@ -105,21 +135,37 @@ class ServingEngine:
         r.out_tokens.append(tok)
         self.slot_req[slot] = r
         self.slot_pos[slot] = S
+        if self.recorder is not None:
+            self.recorder.on_prefill(slot, r.rid, S,
+                                     self.pool.by_request[r.rid])
 
     def step(self) -> int:
         """One engine iteration: admit + one batched decode step.
         Returns number of active slots."""
+        if self.recorder is not None:
+            self.recorder.step = self.steps
         self._admit()
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
         if not active:
+            self.steps += 1
+            if self.recorder is not None:
+                self.recorder.end_step()
             return 0
-        toks = np.zeros((self.max_batch, 1), np.int32)
-        for i in active:
-            toks[i, 0] = self.slot_req[i].out_tokens[-1]
-        pos = jnp.asarray(self.slot_pos, jnp.int32)
-        logits, self.cache = self._decode(self.params, self.cache,
-                                          jnp.asarray(toks), pos)
-        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+        if self.recorder is not None:
+            for i in active:
+                r = self.slot_req[i]
+                self.recorder.on_decode(i, r.rid, int(self.slot_pos[i]),
+                                        self.pool.by_request[r.rid])
+        if self.params is None:     # traffic-only decode: cadence only
+            nxt = np.zeros(self.max_batch, np.int32)
+        else:
+            toks = np.zeros((self.max_batch, 1), np.int32)
+            for i in active:
+                toks[i, 0] = self.slot_req[i].out_tokens[-1]
+            pos = jnp.asarray(self.slot_pos, jnp.int32)
+            logits, self.cache = self._decode(self.params, self.cache,
+                                              jnp.asarray(toks), pos)
+            nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
         for i in active:
             r = self.slot_req[i]
             r.out_tokens.append(int(nxt[i]))
@@ -130,6 +176,9 @@ class ServingEngine:
                 self.pool.free(r.rid)
                 self.slot_req[i] = None
         assert self.pool.check_isolation(), "KV block isolation violated"
+        self.steps += 1
+        if self.recorder is not None:
+            self.recorder.end_step()
         return len(active)
 
     def run(self, max_steps: int = 1000) -> None:

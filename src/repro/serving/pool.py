@@ -35,7 +35,7 @@ class PoolStats:
 
 class BankedKVPool:
     def __init__(self, num_blocks: int, block_size: int, *, num_banks: int = 16,
-                 placement: str = "fractal", seed: int = 0):
+                 placement: str = "fractal", seed: int = 0, recorder=None):
         assert num_blocks % num_banks == 0
         self.num_blocks = num_blocks
         self.block_size = block_size
@@ -46,6 +46,9 @@ class BankedKVPool:
         self.by_request: Dict[int, List[int]] = {}
         self.stats = PoolStats()
         self._rr = 0
+        # optional KVAccessRecorder (serving co-sim): alloc/free events feed
+        # the fabric traffic model's block-churn stream
+        self.recorder = recorder
 
     # ---- geometry: banks are contiguous slabs (physical HBM/shard layout,
     # like the paper's SRAM arrays) — a naive first-free allocator therefore
@@ -97,6 +100,8 @@ class BankedKVPool:
         self._rr = (self._rr + 1) % self.num_banks
         self.by_request.setdefault(request_id, []).extend(got)
         self.stats.allocs += n_blocks
+        if self.recorder is not None:
+            self.recorder.on_alloc(request_id, got)
         return got
 
     def free(self, request_id: int) -> int:
@@ -105,6 +110,8 @@ class BankedKVPool:
             assert self.owner[b] == request_id, "ownership violated"
             self.owner[b] = -1
         self.stats.frees += len(blocks)
+        if self.recorder is not None and blocks:
+            self.recorder.on_free(request_id, blocks)
         return len(blocks)
 
     # ---- invariants / QoS metrics ----

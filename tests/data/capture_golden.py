@@ -20,15 +20,15 @@ import numpy as np
 
 from repro.core.simulator import SimParams, simulate, simulate_batch
 from repro.core.traffic import random_uniform, stack_traces
-from repro.scenarios import compile_scenario, highway_pilot, urban_perception
+from repro.scenarios import highway_pilot, urban_perception
 
 
 def golden_cases():
     """(name, trace, params) points spanning the simulator's feature surface:
     random full-duplex traffic, QoS-classed scenario traces with injection
     timing, and non-default dyn knobs (regulator + aging)."""
-    urban = compile_scenario(urban_perception(txns=24)).trace
-    highway = compile_scenario(highway_pilot(txns=24)).trace
+    urban = urban_perception(txns=24).compile().trace
+    highway = highway_pilot(txns=24).compile().trace
     return [
         ("random_uniform", random_uniform(8, 40, burst=8, seed=3),
          SimParams(max_cycles=3000)),

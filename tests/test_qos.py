@@ -193,8 +193,7 @@ def test_interference_report_single_batched_call(monkeypatch):
 
     monkeypatch.setattr(qos_mod, "simulate_batch", counting)
     sc = qos_isolation(txns=16)
-    from repro.scenarios import compile_scenario
-    full = compile_scenario(sc).trace
+    full = sc.compile().trace
     victim = Trace(full.is_write[:1], full.burst[:1], full.addr[:1],
                    full.start[:1], full.prio[:1])
     rep = interference_report(victim, full, SimParams(max_cycles=4000))
@@ -218,9 +217,9 @@ def test_class_stats_split_directions():
     ])
     (r,) = run_sweep([SweepPoint(sc, SimParams(max_cycles=6000))])
     rt = r.per_class["realtime"]
-    assert np.isnan(rt["read_tput"])          # no reads issued -> no average
+    assert np.isnan(rt["read_throughput"])          # no reads issued -> no average
     assert np.isnan(rt["read_lat_p99"])
-    assert rt["write_tput"] > 0               # the direction it does issue
+    assert rt["write_throughput"] > 0               # the direction it does issue
     assert rt["write_lat_p50"] <= rt["write_lat_p99"] <= rt["write_lat_max"]
     sf = r.per_class["safety"]                # radar issues both directions
     assert sf["read_lat_p99"] >= sf["read_lat_p50"] > 0

@@ -15,7 +15,7 @@ from repro.core.simulator import (SimParams, Trace, batch_envelope, simulate,
                                   simulate_batch)
 from repro.core.traffic import pad_trace, stack_traces
 from repro.scenarios import (GENERATORS, MasterSpec, Scenario, SweepPoint,
-                             compile_scenario, preset_scenarios, run_sweep)
+                             preset_scenarios, run_sweep)
 
 GEOM = MemoryGeometry()
 FAST = SimParams(max_cycles=3000)
@@ -111,7 +111,7 @@ def test_compile_respects_explicit_and_auto_regions():
         MasterSpec("npu", qos="realtime", txns=32),       # auto-placed
         MasterSpec("cpu", txns=32),                       # auto-placed
     ])
-    c = compile_scenario(sc)
+    c = sc.compile()
     assert regions_isolated(c.trace, GEOM)
     for m, (lo, hi) in enumerate(c.regions):
         sel = c.trace.burst[m] > 0
@@ -127,20 +127,20 @@ def test_compile_respects_explicit_and_auto_regions():
 
 def test_compile_rejects_bad_specs():
     with pytest.raises(ValueError):
-        compile_scenario(Scenario("t", [MasterSpec("warp_drive")]))
+        Scenario("t", [MasterSpec("warp_drive")]).compile()
     with pytest.raises(ValueError):
-        compile_scenario(Scenario("t", [MasterSpec("cpu", qos="platinum")]))
+        Scenario("t", [MasterSpec("cpu", qos="platinum")]).compile()
     with pytest.raises(ValueError):
-        compile_scenario(Scenario("t", [MasterSpec("cpu", rate=0.0)]))
+        Scenario("t", [MasterSpec("cpu", rate=0.0)]).compile()
     with pytest.raises(ValueError):
-        compile_scenario(Scenario(
-            "t", [MasterSpec("cpu", region=(0, 2 * GEOM.beats_total))]))
+        Scenario(
+            "t", [MasterSpec("cpu", region=(0, 2 * GEOM.beats_total))]).compile()
     with pytest.raises(ValueError):   # below MIN_REGION_BEATS
-        compile_scenario(Scenario("t", [MasterSpec("npu", region=(0, 64))]))
+        Scenario("t", [MasterSpec("npu", region=(0, 64))]).compile()
     with pytest.raises(ValueError):   # overlapping explicit claims
-        compile_scenario(Scenario("t", [
+        Scenario("t", [
             MasterSpec("radar", region=(0, 1024)),
-            MasterSpec("camera", region=(512, 2048))]))
+            MasterSpec("camera", region=(512, 2048))]).compile()
 
 
 def test_auto_placement_uses_largest_free_gap():
@@ -150,20 +150,20 @@ def test_auto_placement_uses_largest_free_gap():
         MasterSpec("radar", region=(total - 4096, total), txns=16),
         MasterSpec("cpu", txns=16),
     ])
-    c = compile_scenario(sc)
+    c = sc.compile()
     assert regions_isolated(c.trace, GEOM)
     assert c.regions[1][1] <= total - 4096   # auto slot fits below the claim
     # and tight space fails loudly instead of emitting sub-burst slots
     with pytest.raises(ValueError):
-        compile_scenario(Scenario("t", [
+        Scenario("t", [
             MasterSpec("radar", region=(0, total - 100), txns=16),
             MasterSpec("cpu", txns=16),
-        ]))
+        ]).compile()
 
 
 def test_presets_compile_isolated():
     for sc in preset_scenarios(txns=24):
-        c = compile_scenario(sc)
+        c = sc.compile()
         assert regions_isolated(c.trace, GEOM), sc.name
         assert c.trace.num_masters == len(sc.masters)
 
@@ -219,7 +219,7 @@ def test_batched_sweep_matches_sequential_exactly():
 
 
 def test_simulate_batch_validates_inputs():
-    c = [compile_scenario(sc) for sc in preset_scenarios(txns=16)[:2]]
+    c = [sc.compile() for sc in preset_scenarios(txns=16)[:2]]
     with pytest.raises(ValueError):   # mismatched shapes, unstacked
         simulate_batch([c[0].trace, c[1].trace], [FAST, FAST])
     t = stack_traces([c[0].trace, c[1].trace])

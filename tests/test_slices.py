@@ -20,7 +20,7 @@ from repro.core.simulator import (SimParams, Trace, batch_sharding, simulate,
                                   simulate_batch)
 from repro.core.traffic import pad_trace, stack_traces
 from repro.scenarios import (MasterSpec, Scenario, SweepPoint,
-                             compile_scenario, run_sweep, slice_scaling)
+                             run_sweep, slice_scaling)
 from repro.scenarios.spec import resolve_regions
 
 REPO = Path(__file__).resolve().parents[1]
@@ -298,7 +298,7 @@ def test_slice_affinity_places_regions_in_slice_spans():
     for s_count in (1, 2, 4):
         for remote in ([False] if s_count == 1 else [False, True]):
             sc = slice_scaling(s_count, txns=8, remote=remote)
-            c = compile_scenario(sc)
+            c = sc.compile()
             assert regions_isolated(c.trace, sc.geom), sc.name
             bps = sc.geom.beats_per_slice
             home = master_home_slices(len(sc.masters), sc.geom)
@@ -317,7 +317,7 @@ def test_unconstrained_masters_default_to_home_slice_on_region_fabric():
         MasterSpec("npu", qos="realtime", txns=8, slice_affinity=1),
         MasterSpec("cpu", txns=8),                 # unconstrained
     ], g)
-    c = compile_scenario(sc)
+    c = sc.compile()
     assert regions_isolated(c.trace, g)
     bps = g.beats_per_slice
     home = master_home_slices(3, g)
@@ -330,15 +330,15 @@ def test_unconstrained_masters_default_to_home_slice_on_region_fabric():
 def test_slice_affinity_validation():
     g = MemoryGeometry(num_slices=2, slice_policy="region")
     with pytest.raises(ValueError, match="out of range"):
-        compile_scenario(Scenario(
-            "t", [MasterSpec("cpu", slice_affinity=7)], g))
+        Scenario(
+            "t", [MasterSpec("cpu", slice_affinity=7)], g).compile()
     with pytest.raises(ValueError, match="slice_policy"):
-        compile_scenario(Scenario(
+        Scenario(
             "t", [MasterSpec("cpu", slice_affinity=1)],
-            MemoryGeometry(num_slices=2)))      # hash policy: no affine spans
+            MemoryGeometry(num_slices=2)).compile()      # hash policy: no affine spans
     # affinity is a no-op constraint on a single-slice fabric
-    c = compile_scenario(Scenario(
-        "t", [MasterSpec("cpu", txns=8, slice_affinity=0)]))
+    c = Scenario(
+        "t", [MasterSpec("cpu", txns=8, slice_affinity=0)]).compile()
     assert c.regions[0][1] <= MemoryGeometry().beats_total
 
 
