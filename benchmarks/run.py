@@ -2,14 +2,35 @@
 
   PYTHONPATH=src python -m benchmarks.run [--full]
 
-Prints ``name,seconds,derived`` CSV lines and writes
-experiments/bench_results.json for EXPERIMENTS.md."""
+Prints ``name,compile_s,run_s,derived`` CSV lines and writes
+experiments/bench_results.json for EXPERIMENTS.md.
+
+Each job runs TWICE: the first (cold) call pays JIT compilation, the second
+hits the warm jit cache — so the JSON separates ``compile_s`` (cold minus
+warm) from ``run_s`` (steady state), and a jitted job whose wall time is all
+compile no longer reads as a slow simulator.  Both calls are fenced with
+``jax.block_until_ready`` so async dispatch cannot leak work past the timer.
+``--cold`` skips the warm pass (halves wall time; ``run_s`` then includes
+compile and ``compile_s`` is null)."""
 from __future__ import annotations
 
 import argparse
 import json
 import time
 from pathlib import Path
+
+
+def _timed(fn):
+    """(result, compile_s, run_s) — cold call then warm call, both fenced."""
+    import jax
+
+    t0 = time.time()
+    out = jax.block_until_ready(fn())
+    t1 = time.time()
+    jax.block_until_ready(fn())
+    t2 = time.time()
+    run_s = t2 - t1
+    return out, max((t1 - t0) - run_s, 0.0), run_s
 
 
 def main() -> None:
@@ -20,6 +41,8 @@ def main() -> None:
                     help="comma-separated job names to run")
     ap.add_argument("--list", action="store_true",
                     help="print the available job names and exit")
+    ap.add_argument("--cold", action="store_true",
+                    help="single cold run per job (no compile/run split)")
     args = ap.parse_args()
 
     from benchmarks import paper_figures as F
@@ -70,14 +93,23 @@ def main() -> None:
         jobs = [j for j in jobs if j[0] in wanted]
 
     results = {}
-    print("name,seconds,derived")
+    print("name,compile_s,run_s,derived")
     for name, fn in jobs:
-        t0 = time.time()
-        out = fn()
-        dt = time.time() - t0
-        results[name] = {"seconds": round(dt, 2), "results": out}
+        if args.cold:
+            t0 = time.time()
+            out = fn()
+            compile_s, run_s = None, time.time() - t0
+        else:
+            out, compile_s, run_s = _timed(fn)
+        results[name] = {
+            "seconds": round((compile_s or 0.0) + run_s, 2),  # total, legacy
+            "compile_s": None if compile_s is None else round(compile_s, 2),
+            "run_s": round(run_s, 2),
+            "results": out,
+        }
         key = next(iter(out))
-        print(f"{name},{dt:.2f},{json.dumps(out[key])[:110]}")
+        cs = "" if compile_s is None else f"{compile_s:.2f}"
+        print(f"{name},{cs},{run_s:.2f},{json.dumps(out[key])[:110]}")
 
     # roofline table (from the dry-run artifacts, if present)
     try:

@@ -10,13 +10,54 @@ Two layers of checking:
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.address import MemoryGeometry, flat_bank_id, sub_bank_id
-from repro.core.simulator import SimParams, Trace, simulate_batch
-from repro.core.traffic import stack_traces
+
+if TYPE_CHECKING:  # type-only: the simulator imports this module's policy
+    from repro.core.simulator import SimParams, Trace
+
+
+# ---------------------------------------------------------------------------
+# Arbitration policy: the comparator key the per-bank QoS arbiter minimizes
+# ---------------------------------------------------------------------------
+#
+# This is the single definition of the grant order; the simulator's reference
+# arbiter stage and the Pallas bank-arbiter kernel's host-side prep both
+# build their keys here, so the two paths cannot drift.
+
+def aging_boost(age, qos_aging):
+    """Anti-starvation promotion: one priority level per ``qos_aging``
+    cycles of waiting (0 disables aging ⇒ pure priority).  Works on numpy
+    and traced jnp operands alike (``where``/``maximum`` dispatch on the
+    operand type)."""
+    xp = np if isinstance(age, (np.ndarray, np.generic, int)) else _jnp()
+    return xp.where(qos_aging > 0, age // xp.maximum(qos_aging, 1), 0)
+
+
+def arbitration_priority_key(level, age, rr_dist, *, age_cap: int,
+                             num_masters: int):
+    """Packed lexicographic (QoS level, FCFS age, round-robin distance)
+    comparator key — smaller wins.  ``age`` saturates at ``age_cap`` (chosen
+    ≥ max_cycles by the simulator so it cannot saturate within a run) and
+    the whole key stays strictly below the int32 ineligible filler."""
+    return (level * (age_cap + 1) + (age_cap - age)) * num_masters + rr_dist
+
+
+def _jnp():
+    import jax.numpy as jnp
+    return jnp
+
+
+def simulate_batch(traces, prms, **kw):
+    """Late-bound alias of :func:`repro.core.simulator.simulate_batch` —
+    resolved at call time (the simulator imports this module's arbitration
+    policy, so a top-level import here would be circular) and kept as a
+    module attribute so tests can monkeypatch the seam."""
+    from repro.core.simulator import simulate_batch as _sb
+    return _sb(traces, prms, **kw)
 
 
 def touched_subbanks(addr: np.ndarray, burst: np.ndarray,
@@ -93,14 +134,19 @@ def subbank_isolated(trace: Trace,
     return True
 
 
-def interference_report(victim_trace: Trace, full_trace: Trace,
-                        prm: SimParams = SimParams()) -> Dict[str, float]:
+def interference_report(victim_trace: "Trace", full_trace: "Trace",
+                        prm: Optional["SimParams"] = None) -> Dict[str, float]:
     """Victim-alone vs victim-among-aggressors latency/throughput deltas.
     ``full_trace`` row 0 must equal the victim's row.
 
     Both runs are evaluated as ONE batched (vmapped) scan: the victim trace
     is padded to the full trace's [X, N] envelope (padding rows are inert)
     and stacked with it, so a single compiled call yields both points."""
+    from repro.core.simulator import SimParams
+    from repro.core.traffic import stack_traces
+
+    if prm is None:
+        prm = SimParams()
     pair = stack_traces([victim_trace, full_trace])
     out = simulate_batch(pair, [prm, prm])
     alone = {k: np.asarray(v)[0] for k, v in out.items()}

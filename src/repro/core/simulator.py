@@ -32,15 +32,39 @@ the command — the router's backpressure.  With ``num_slices=1`` every beat is
 local, no credit is ever consumed, and results are bit-for-bit identical to
 the single-slice simulator (pinned by the golden regression test).
 
-The cycle body is decomposed into composable stage functions, evaluated in
-fabric order each cycle:
+Cycle core architecture (the packed-state refactor)
+---------------------------------------------------
 
-  ``_stage_accept``         acceptance: credits, regulator, router admission
-  ``_stage_dispatch``       split-by-4 dispatch into beat slots (+hop delay)
-  ``_stage_bank_arbitrate`` per-bank QoS arbitration, one grant per bank
-  ``_stage_router_release`` ingress-credit release + per-slice accounting
-  ``_stage_return_bus``     read-return bus, one beat per port per cycle
-  ``_stage_retire``         transaction completion + busy-cycle accounting
+The scan carry is a typed :class:`repro.core.state.SimState` pytree with
+explicit narrow dtypes (bit-packed slot flags, ``int8``/``int16`` for hop
+counts, credits, and indices — see ``core/state.py`` for the field table);
+stage functions widen fields to int32 views on read and narrow on write, so
+arithmetic semantics are unchanged.  Beat slots are laid out ``[X, P]``
+(port-major), which turns the per-port return bus and dispatch ring into
+dense vector ops along the ``P`` axis; only per-bank arbitration reduces
+across ports, via one flat comparator-tree call.
+
+The cycle body is a *stage registry*: each stage is registered by name
+(:func:`register_stage`) with the uniform signature
+``stage(state, wires, ctx) -> (state, wires)`` — ``wires`` carries the
+intra-cycle values stages hand each other (acceptance decisions, per-bank
+grant winners, return-bus picks), ``ctx`` the static tensors and traced dyn
+scalars.  ``SimParams.stages`` selects the pipeline (default
+``DEFAULT_PIPELINE``), so router/arbiter variants are swappable by
+configuration instead of by editing ``cycle()``:
+
+  ``accept``          acceptance: credits, regulator, router admission
+  ``dispatch``        split-by-4 dispatch into beat slots (+hop delay)
+  ``bank_arbitrate``  per-bank QoS arbitration, one grant per bank
+  ``router_release``  ingress-credit release + per-slice accounting
+  ``return_bus``      read-return bus, one beat per port per cycle
+  ``retire``          transaction completion + busy-cycle accounting
+
+The per-bank comparator tree itself is a swappable backend
+(``SimParams.arbiter``): ``"jax"`` runs the two-pass ``segment_min``
+reference, ``"pallas"`` the Pallas TPU kernel
+(``kernels/bank_arbiter/``, ``interpret=True`` CPU fallback) — bit-exact
+either way (hypothesis-tested grant-for-grant).
 
 Everything is a fixed-size jnp array and one ``lax.scan`` over cycles, so a
 whole sweep runs as a single vmapped scan: :func:`simulate_batch` evaluates a
@@ -50,7 +74,8 @@ call, and shards the batch axis across devices when more than one is visible
 dataflow (outstanding credits, buffer depth, pipeline latencies, bank
 occupancy, hop latency, ingress credits) are passed as a traced ``dyn`` vector
 so they can differ per point; parameters that shape the program (geometry,
-banking, burst ceiling, cycle count) stay static.
+banking, burst ceiling, cycle count, pipeline, arbiter backend) stay static.
+Off-accelerator the jitted cores donate their input buffers.
 
 Traces may carry per-transaction earliest-issue times (``Trace.start``), which
 gates command acceptance — this is how the scenario engine expresses injection
@@ -67,7 +92,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass, replace as dataclasses_replace
 from functools import lru_cache, partial
-from typing import Dict, Optional, Sequence
+from typing import Callable, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -76,8 +101,11 @@ import numpy as np
 from repro.core.address import (MemoryGeometry, flat_bank_id,
                                 master_home_slices, slice_of_bank,
                                 slice_of_beat)
-
-INF32 = jnp.int32(2**30)
+from repro.core.qos import aging_boost, arbitration_priority_key
+from repro.core.state import (INF32, SLOT_GRANTED, SLOT_IDLE, SLOT_WAITING,
+                              SimState, bank_dtype, init_state,
+                              pack_slot_flags, unpack_slot_flags, widen)
+from repro.kernels.bank_arbiter.ops import bank_arbiter_winners
 
 #: SimParams fields that enter the scan as traced *values* (per-point in a
 #: batched sweep).  Order defines the layout of the ``dyn`` vector.
@@ -92,6 +120,11 @@ PRIO_LEVELS = 8
 REGULATED_PRIO = 2
 #: fixed-point scale of the regulator token bucket (tokens per beat)
 REG_SCALE = 256
+
+#: ``max_burst`` ceiling — per-transaction remaining-beat counters are int8
+MAX_BURST_LIMIT = 127
+#: ``outstanding``/``split_buffer`` ceiling — credit counters are int16
+CREDIT_LIMIT = 2**14
 
 
 @dataclass(frozen=True)
@@ -117,6 +150,8 @@ class SimParams:
     banking: str = "paper"       # paper | linear | no_fractal
     max_cycles: int = 200_000
     slots_override: Optional[int] = None  # force a common ring size (batching)
+    stages: Optional[Tuple[str, ...]] = None  # None = DEFAULT_PIPELINE
+    arbiter: str = "jax"         # per-bank comparator backend: jax | pallas
 
     @property
     def slots_per_master(self) -> int:
@@ -129,11 +164,29 @@ class SimParams:
     def static_key(self) -> tuple:
         """Fields that must agree across every point of one compiled batch."""
         return (self.geom, self.expand_rate, self.max_burst, self.banking,
-                self.max_cycles)
+                self.max_cycles, self.stages, self.arbiter)
 
     def dyn_vector(self) -> np.ndarray:
         """The traced per-point parameter vector (see ``DYN_FIELDS``)."""
+        if not (0 <= self.outstanding < CREDIT_LIMIT
+                and 0 <= self.split_buffer < CREDIT_LIMIT):
+            raise ValueError(
+                f"outstanding/split_buffer must be in [0, {CREDIT_LIMIT}) "
+                f"(int16 credit counters); got {self.outstanding}/"
+                f"{self.split_buffer}")
+        if self.reg_burst * REG_SCALE >= 2**30:
+            raise ValueError(f"reg_burst too large: {self.reg_burst}")
         return np.array([getattr(self, f) for f in DYN_FIELDS], np.int32)
+
+    def pipeline(self) -> Tuple[str, ...]:
+        """The stage names ``cycle()`` will run, validated loudly."""
+        names = tuple(self.stages) if self.stages else DEFAULT_PIPELINE
+        unknown = [n for n in names if n not in STAGE_REGISTRY]
+        if unknown:
+            raise ValueError(
+                f"unknown stage(s) {unknown}; registered stages: "
+                f"{sorted(STAGE_REGISTRY)}")
+        return names
 
 
 def bank_of(addr, prm: SimParams):
@@ -211,6 +264,9 @@ def _precompute_beats(trace: Trace, prm: SimParams):
     consistent under every banking comparator (with ``banking="paper"`` this
     equals ``slice_of_beat``'s slice by construction)."""
     g = prm.geom
+    if prm.max_burst > MAX_BURST_LIMIT:
+        raise ValueError(f"max_burst must be <= {MAX_BURST_LIMIT} "
+                         f"(int8 beat counters); got {prm.max_burst}")
     X, N = trace.addr.shape
     off = np.arange(prm.max_burst)[None, None, :]
     beat_addr = trace.addr[..., None] + off
@@ -239,6 +295,17 @@ def _precompute_beats(trace: Trace, prm: SimParams):
             ingress.astype(np.int32))
 
 
+def _device_args(prm: SimParams, iw, b, banks, hops, ing, start, prio, dyn):
+    """Host arrays → narrow device dtypes (one choke point so the sequential
+    and batched paths cannot drift): burst/write/prio/hops int8, ingress
+    int16, banks the narrowest dtype that indexes the fabric's banks."""
+    return (jnp.asarray(iw, jnp.int8), jnp.asarray(b, jnp.int8),
+            jnp.asarray(banks, bank_dtype(prm.geom.num_banks)),
+            jnp.asarray(hops, jnp.int8), jnp.asarray(ing, jnp.int16),
+            jnp.asarray(start, jnp.int32), jnp.asarray(prio, jnp.int8),
+            jnp.asarray(dyn, jnp.int32))
+
+
 # ---------------------------------------------------------------------------
 # The cycle scan
 # ---------------------------------------------------------------------------
@@ -247,14 +314,9 @@ def simulate(trace: Trace, prm: SimParams = SimParams()) -> Dict[str, np.ndarray
     """Run the sim; returns per-port and per-txn statistics (numpy)."""
     banks_np, _, hops_np, ing_np = _precompute_beats(trace, prm)
     fn = _core_jitted(prm)
-    out = fn(jnp.asarray(trace.is_write, jnp.int32),
-             jnp.asarray(trace.burst, jnp.int32),
-             jnp.asarray(banks_np),
-             jnp.asarray(hops_np),
-             jnp.asarray(ing_np),
-             jnp.asarray(trace.start_or_zeros()),
-             jnp.asarray(trace.prio_or_zeros()),
-             jnp.asarray(prm.dyn_vector()))
+    out = fn(*_device_args(prm, trace.is_write, trace.burst, banks_np,
+                           hops_np, ing_np, trace.start_or_zeros(),
+                           trace.prio_or_zeros(), prm.dyn_vector()))
     return jax.tree_util.tree_map(np.asarray, out)
 
 
@@ -269,7 +331,8 @@ def batch_envelope(prms: Sequence[SimParams]) -> SimParams:
         if p.static_key() != key:
             raise ValueError(
                 "batched points must share geom/expand_rate/max_burst/"
-                f"banking/max_cycles; got {p.static_key()} vs {key}")
+                f"banking/max_cycles/stages/arbiter; got {p.static_key()} "
+                f"vs {key}")
     slots = max(p.slots_per_master for p in prms)
     return dataclasses_replace(prms[0], slots_override=slots)
 
@@ -320,8 +383,7 @@ def simulate_batch(traces: Sequence[Trace],
     st = np.stack([t.start_or_zeros() for t in traces])
     pr = np.stack([t.prio_or_zeros() for t in traces])
     dyn = np.stack([p.dyn_vector() for p in prms])
-    args = [jnp.asarray(a) for a in
-            (iw, b, banks, hops, ing, st, pr, dyn)]
+    args = list(_device_args(env, iw, b, banks, hops, ing, st, pr, dyn))
     sharding = batch_sharding(len(traces)) if shard else None
     if sharding is not None:
         args = [jax.device_put(a, sharding) for a in args]
@@ -347,14 +409,21 @@ def _batch_jitted(prm: SimParams):
     return _batch_jitted_cached(_static_prm(prm))
 
 
+def _donate() -> tuple:
+    """Donate the jitted cores' input buffers (fresh host arrays every call)
+    — except on CPU, where XLA cannot consume donations and would warn."""
+    return tuple(range(8)) if jax.default_backend() != "cpu" else ()
+
+
 @lru_cache(maxsize=32)
 def _core_jitted_cached(prm: SimParams):
-    return jax.jit(partial(_core, prm=prm))
+    return jax.jit(partial(_core, prm=prm), donate_argnums=_donate())
 
 
 @lru_cache(maxsize=32)
 def _batch_jitted_cached(prm: SimParams):
-    return jax.jit(jax.vmap(partial(_core, prm=prm)))
+    return jax.jit(jax.vmap(partial(_core, prm=prm)),
+                   donate_argnums=_donate())
 
 
 def _age_cap(prm: SimParams, num_masters: int) -> int:
@@ -368,26 +437,52 @@ def _age_cap(prm: SimParams, num_masters: int) -> int:
 
 
 # ---------------------------------------------------------------------------
-# Cycle stages.  Each stage takes (state, ctx) and returns the updated state
-# (plus the values downstream stages consume).  ``ctx`` carries the static
-# per-run tensors and the traced dyn scalars; every stage reads the *current*
-# cycle from ``state["now"]`` and only ``_stage_retire`` advances it.
+# Cycle stages — the registry.
+#
+# Uniform signature: ``stage(state, wires, ctx) -> (state, wires)``.
+#   * ``state`` — the :class:`SimState` carry (narrow storage dtypes; widen
+#     on read, narrow on write — see ``core/state.py``)
+#   * ``wires`` — intra-cycle values stages hand downstream (``"accept"``,
+#     ``"arb"``, ``"ret"``); reset to {} at the top of every cycle
+#   * ``ctx``   — static per-run tensors + traced dyn scalars; every stage
+#     reads the *current* cycle from ``state.now`` and only ``retire``
+#     advances it.
+#
+# Register replacements (alternate routers/arbiters/instrumentation) under a
+# new name and select them via ``SimParams.stages``.
 # ---------------------------------------------------------------------------
 
-def _stage_accept(st, c):
+Stage = Callable[[SimState, dict, dict], Tuple[SimState, dict]]
+
+STAGE_REGISTRY: Dict[str, Stage] = {}
+
+DEFAULT_PIPELINE = ("accept", "dispatch", "bank_arbitrate", "router_release",
+                    "return_bus", "retire")
+
+
+def register_stage(name: str):
+    """Decorator: add a cycle stage to the registry under ``name``."""
+    def deco(fn: Stage) -> Stage:
+        STAGE_REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+@register_stage("accept")
+def _stage_accept(st: SimState, wires, c):
     """Command acceptance, one per port per cycle: outstanding credits,
     split-buffer credits, W-data-bus pacing, the best-effort token-bucket
     regulator, and the inter-slice router's admission gate (a burst with
     remote beats needs free ingress credits on every destination slice)."""
-    X, N = c["X"], c["N"]
+    N = c["N"]
     d = c["d"]
-    now = st["now"]
-    ar = jnp.arange(X)
-    nt = st["next_txn"]
+    now = st.now
+    ar = c["ar"]
+    nt = st.next_txn
     has_txn = nt < N
     nt_c = jnp.minimum(nt, N - 1)
-    burst = c["tx_burst"][ar, nt_c]
-    is_w = c["tx_write"][ar, nt_c]
+    burst = widen(c["tx_burst"][ar, nt_c])
+    is_w = widen(c["tx_write"][ar, nt_c])
     ready = c["tx_start"][ar, nt_c] <= now
     dirn = is_w  # 0 = read, 1 = write (AXI channels are independent)
     # token-bucket regulator: a best-effort port must hold tokens for the
@@ -396,7 +491,7 @@ def _stage_accept(st, c):
     # stalls until refill repays it, so a burst > reg_burst is delayed,
     # never deadlocked, and the sustained rate cap still holds
     reg_gate = c["regulated"] & (d["reg_rate"] > 0)
-    reg_tokens = jnp.minimum(st["reg_tokens"] + d["reg_rate"],
+    reg_tokens = jnp.minimum(st.reg_tokens + d["reg_rate"],
                              d["reg_burst"] * REG_SCALE)
     reg_need = jnp.minimum(burst, d["reg_burst"]) * REG_SCALE
     # router admission: every destination slice of the burst's remote beats
@@ -409,11 +504,11 @@ def _stage_accept(st, c):
     # needs of every lower-indexed candidate (an in-order ingress queue, so
     # one admission round cannot oversubscribe a slice beyond the debt
     # allowance; lower port index = admission priority).
-    need = c["tx_ing"][ar, nt_c]                            # [X, NSL]
+    need = widen(c["tx_ing"][ar, nt_c])                     # [X, NSL]
     pre_can = (has_txn & (burst > 0) & ready
-               & (st["outstanding"][ar, dirn] < d["outstanding"])
-               & (st["credits"][ar, dirn] >= burst)
-               & ((is_w == 0) | (st["fwd_free"] <= now))
+               & (st.outstanding[ar, dirn] < d["outstanding"])
+               & (st.credits[ar, dirn] >= burst)
+               & ((is_w == 0) | (st.fwd_free <= now))
                & (~reg_gate | (reg_tokens >= reg_need)))
     need_cand = jnp.where(pre_can[:, None], need, 0)
     prior = jnp.cumsum(need_cand, axis=0) - need_cand       # exclusive [X,NSL]
@@ -423,195 +518,214 @@ def _stage_accept(st, c):
     # traffic especially) must never stall on its debt
     ing_ok = jnp.all(
         (d["slice_ingress"] == 0) | (need_clamped == 0)
-        | (st["ing_used"][None, :] + prior + need_clamped
+        | (st.ing_used[None, :] + prior + need_clamped
            <= d["slice_ingress"]),
         axis=1)
     can = pre_can & ing_ok
     reg_tokens = reg_tokens - jnp.where(can & reg_gate,
                                         burst * REG_SCALE, 0)
-    ing_used = st["ing_used"] + jnp.sum(
+    ing_used = st.ing_used + jnp.sum(
         jnp.where(can[:, None], need, 0), axis=0)
-    accept = st["accept_cycle"].at[ar, nt_c].set(
-        jnp.where(can, now, st["accept_cycle"][ar, nt_c]))
+    accept = jnp.where(can[:, None] & (c["txn_ids"] == nt_c[:, None]),
+                       now, st.accept_cycle)
     next_txn = nt + can.astype(jnp.int32)
-    outstanding = st["outstanding"].at[ar, dirn].add(can.astype(jnp.int32))
-    credits = st["credits"].at[ar, dirn].add(-jnp.where(can, burst, 0))
-    fwd_free = jnp.where(can & (is_w > 0), now + burst, st["fwd_free"])
-    st = dict(st, next_txn=next_txn, outstanding=outstanding,
-              credits=credits, fwd_free=fwd_free, reg_tokens=reg_tokens,
-              ing_used=ing_used, accept_cycle=accept)
-    return st, dict(can=can, burst=burst, is_w=is_w, nt_c=nt_c)
+    outstanding = st.outstanding.at[ar, dirn].add(
+        can.astype(st.outstanding.dtype))
+    credits = st.credits.at[ar, dirn].add(
+        (-jnp.where(can, burst, 0)).astype(st.credits.dtype))
+    fwd_free = jnp.where(can & (is_w > 0), now + burst, st.fwd_free)
+    st = st.replace(next_txn=next_txn, outstanding=outstanding,
+                    credits=credits, fwd_free=fwd_free,
+                    reg_tokens=reg_tokens, ing_used=ing_used,
+                    accept_cycle=accept)
+    return st, dict(wires, accept=dict(can=can, burst=burst, is_w=is_w,
+                                       nt_c=nt_c))
 
 
-def _stage_dispatch(st, acc, c):
+@register_stage("dispatch")
+def _stage_dispatch(st: SimState, wires, c):
     """Split/dispatch: fan the accepted burst's beats into the per-master
     slot ring.  Reads expand ``expand_rate`` beats/cycle at the splitter;
     write data is paced by the 1-beat/cycle port bus.  A remote beat's
     arrival at its bank queue is delayed ``hop_latency`` per ring hop — the
-    inter-slice router's command-path latency."""
-    X, P, S = c["X"], c["P"], c["S"]
+    inter-slice router's command-path latency.
+
+    Slot-ring math is dense over the ``[X, P]`` layout: slot ``p`` of port
+    ``x`` would hold beat ``(p - beats_issued[x]) mod P`` of the burst; a
+    slot whose beat index is inside the accepted burst is (re)written —
+    bit-for-bit the scatter the pre-refactor core did, with no scatter."""
     prm, d = c["prm"], c["d"]
-    now = st["now"]
-    ar = jnp.arange(X)
+    acc = wires["accept"]
+    now = st.now
+    ar = c["ar"]
     can, burst, is_w, nt_c = (acc["can"], acc["burst"], acc["is_w"],
                               acc["nt_c"])
-    offs = jnp.arange(prm.max_burst, dtype=jnp.int32)
-    pace = jnp.where(is_w[:, None] > 0, offs, offs // prm.expand_rate)
-    hops = c["tx_hops"][ar[:, None], nt_c[:, None], offs[None, :]]  # [X, mb]
-    arrive = now + d["cmd_latency"] + pace + d["hop_latency"] * hops
-    bvalid = (offs[None, :] < burst[:, None]) & can[:, None]
-    ring = (st["beats_issued"][:, None] + offs[None, :]) % P
-    flat = ar[:, None] * P + ring
-    flat = jnp.where(bvalid, flat, S)                       # OOB -> drop
-    flat = flat.reshape(-1)
-    sl_busy = st["sl_busy"].at[flat].set(
-        jnp.broadcast_to(1, (X * prm.max_burst,)), mode="drop")
-    sl_bank = st["sl_bank"].at[flat].set(
-        c["tx_banks"][ar[:, None], nt_c[:, None], offs[None, :]]
-        .reshape(-1), mode="drop")
-    sl_arrive = st["sl_arrive"].at[flat].set(
-        arrive.reshape(-1), mode="drop")
-    sl_ready = st["sl_ready"].at[flat].set(
-        jnp.broadcast_to(INF32, (X * prm.max_burst,)), mode="drop")
-    sl_txn = st["sl_txn"].at[flat].set(
-        jnp.broadcast_to(nt_c[:, None], (X, prm.max_burst)).reshape(-1),
-        mode="drop")
-    sl_write = st["sl_write"].at[flat].set(
-        jnp.broadcast_to(is_w[:, None], (X, prm.max_burst)).reshape(-1),
-        mode="drop")
-    sl_hops = st["sl_hops"].at[flat].set(hops.reshape(-1), mode="drop")
-    beats_issued = st["beats_issued"] + jnp.where(can, burst, 0)
-    return dict(st, sl_busy=sl_busy, sl_bank=sl_bank, sl_arrive=sl_arrive,
-                sl_ready=sl_ready, sl_txn=sl_txn, sl_write=sl_write,
-                sl_hops=sl_hops, beats_issued=beats_issued)
+    off = (c["pos"][None, :] - st.beats_issued[:, None]) % c["P"]  # [X, P]
+    wr = can[:, None] & (off < burst[:, None])
+    offc = jnp.minimum(off, prm.max_burst - 1)
+    bank_new = c["tx_banks"][ar[:, None], nt_c[:, None], offc]
+    hops_new = c["tx_hops"][ar[:, None], nt_c[:, None], offc]
+    pace = jnp.where(is_w[:, None] > 0, off, off // prm.expand_rate)
+    arrive = now + d["cmd_latency"] + pace + d["hop_latency"] * widen(hops_new)
+    phase, write = unpack_slot_flags(st.sl_flags)
+    st = st.replace(
+        sl_flags=pack_slot_flags(jnp.where(wr, SLOT_WAITING, phase),
+                                 jnp.where(wr, is_w[:, None], write)),
+        sl_bank=jnp.where(wr, bank_new, st.sl_bank),
+        sl_arrive=jnp.where(wr, arrive, st.sl_arrive),
+        sl_ready=jnp.where(wr, INF32, st.sl_ready),
+        sl_txn=jnp.where(wr, nt_c[:, None].astype(st.sl_txn.dtype),
+                         st.sl_txn),
+        sl_hops=jnp.where(wr, hops_new, st.sl_hops),
+        beats_issued=st.beats_issued + jnp.where(can, burst, 0))
+    return st, wires
 
 
-def _stage_bank_arbitrate(st, c):
+@register_stage("bank_arbitrate")
+def _stage_bank_arbitrate(st: SimState, wires, c):
     """Per-bank arbitration, one grant per bank per cycle: priority level
     first (aging promotes a waiting beat one level per ``qos_aging`` cycles
     so best-effort can never starve), FCFS within a level (AGE_CAP >=
     max_cycles: the age term cannot saturate within a run), round-robin among
     masters as the tie-break.  A granted read's data heads home after the
-    bank's access latency plus the router's return-path hops."""
-    X, S, NB = c["X"], c["S"], c["NB"]
-    d = c["d"]
-    now = st["now"]
-    sl_bank = st["sl_bank"]
-    waiting = (st["sl_busy"] == 1) & (st["sl_arrive"] <= now)
-    bank_ok = st["bank_free"][sl_bank] <= now
-    elig = waiting & bank_ok
-    age = jnp.clip(now - st["sl_arrive"], 0, c["AGE_CAP"])
-    boost = jnp.where(d["qos_aging"] > 0,
-                      age // jnp.maximum(d["qos_aging"], 1), 0)
+    bank's access latency plus the router's return-path hops.
+
+    The comparator tree runs as one ``bank_arbiter_winners`` call
+    (``SimParams.arbiter`` picks the jax reference or the Pallas kernel);
+    every piece of bookkeeping then derives from the [NB] winner view —
+    per-slot work is one gather + compare."""
+    X, P, S, NB = c["X"], c["P"], c["S"], c["NB"]
+    prm, d = c["prm"], c["d"]
+    now = st.now
+    phase, write = unpack_slot_flags(st.sl_flags)
+    bank = widen(st.sl_bank)                                  # [X, P]
+    waiting = (phase == SLOT_WAITING) & (st.sl_arrive <= now)
+    elig = waiting & (st.bank_free[bank] <= now)
+    age = jnp.clip(now - st.sl_arrive, 0, c["AGE_CAP"])
+    boost = aging_boost(age, d["qos_aging"])
     level = jnp.clip(c["slot_prio"] - boost, 0, PRIO_LEVELS - 1)
-    prio = (c["master_of_slot"] - st["bank_rr"][sl_bank]) % X
-    key = (level * (c["AGE_CAP"] + 1) + (c["AGE_CAP"] - age)) * X + prio
-    seg = jnp.where(elig, sl_bank, NB)
-    best = jax.ops.segment_min(jnp.where(elig, key, 2**30), seg,
-                               num_segments=NB + 1)[:-1]    # [NB]
-    is_best = elig & (key == best[sl_bank])
-    # unique winner per bank: lowest slot index among is_best
-    win_slot = jax.ops.segment_min(jnp.where(is_best, c["slot_ids"], S),
-                                   jnp.where(is_best, sl_bank, NB),
-                                   num_segments=NB + 1)[:-1]
-    granted = is_best & (c["slot_ids"] == win_slot[sl_bank])     # [S]
-    bank_free = st["bank_free"].at[sl_bank].add(
-        jnp.where(granted, d["bank_occupancy"]
-                  + jnp.maximum(0, now - st["bank_free"][sl_bank]), 0))
-    bank_rr = st["bank_rr"].at[sl_bank].add(
-        jnp.where(granted,
-                  (c["master_of_slot"] - st["bank_rr"][sl_bank]) % X + 1, 0))
-    sl_busy = jnp.where(granted, 2, st["sl_busy"])
-    sl_ready = jnp.where(granted, now + d["bank_occupancy"]
-                         + d["bank_latency"]
-                         + d["hop_latency"] * st["sl_hops"], st["sl_ready"])
+    rr = (c["master_col"] - st.bank_rr[bank]) % X
+    key = arbitration_priority_key(level, age, rr, age_cap=c["AGE_CAP"],
+                                   num_masters=X)
+    win = bank_arbiter_winners(key.reshape(S), bank.reshape(S),
+                               elig.reshape(S), num_banks=NB,
+                               backend=prm.arbiter)           # [NB]
+    has_win = win < S
+    winc = jnp.minimum(win, S - 1)
+    wmaster = winc // P
+    # a slot is granted iff it IS its bank's winner (winners are eligible by
+    # construction; a bank with no eligible slot reports the sentinel S)
+    granted = c["flat_ids"] == win[bank]                      # [X, P]
+    wwrite = write.reshape(S)[winc]
+    occ = d["bank_occupancy"]
+    bank_free = jnp.where(has_win, jnp.maximum(st.bank_free, now) + occ,
+                          st.bank_free)
+    bank_rr = jnp.where(has_win,
+                        st.bank_rr + (wmaster - st.bank_rr) % X + 1,
+                        st.bank_rr)
+    sl_ready = jnp.where(granted, now + occ + d["bank_latency"]
+                         + d["hop_latency"] * widen(st.sl_hops), st.sl_ready)
+    # freed split-buffer credits per port, from the [NB] winner view
+    seg = jnp.where(has_win, wmaster, X)
     freed_r = jax.ops.segment_sum(
-        (granted & (st["sl_write"] == 0)).astype(jnp.int32),
-        c["master_of_slot"], num_segments=X)
+        (has_win & (wwrite == 0)).astype(jnp.int32), seg, num_segments=X + 1)
     freed_w = jax.ops.segment_sum(
-        (granted & (st["sl_write"] == 1)).astype(jnp.int32),
-        c["master_of_slot"], num_segments=X)
-    credits = st["credits"].at[:, 0].add(freed_r).at[:, 1].add(freed_w)
-    st = dict(st, bank_free=bank_free, bank_rr=bank_rr, sl_busy=sl_busy,
-              sl_ready=sl_ready, credits=credits)
-    return st, granted
+        (has_win & (wwrite == 1)).astype(jnp.int32), seg, num_segments=X + 1)
+    credits = st.credits + jnp.stack(
+        [freed_r[:-1], freed_w[:-1]], axis=1).astype(st.credits.dtype)
+    st = st.replace(bank_free=bank_free, bank_rr=bank_rr,
+                    sl_flags=pack_slot_flags(
+                        jnp.where(granted, SLOT_GRANTED, phase), write),
+                    sl_ready=sl_ready, credits=credits)
+    arb = dict(has_win=has_win, wmaster=wmaster, wwrite=wwrite,
+               whops=widen(st.sl_hops).reshape(S)[winc],
+               wtxn=widen(st.sl_txn).reshape(S)[winc])
+    return st, dict(wires, arb=arb)
 
 
-def _stage_router_release(st, granted, c):
+@register_stage("router_release")
+def _stage_router_release(st: SimState, wires, c):
     """Inter-slice router bookkeeping at bank grant: a remote beat leaving
     the ingress queue for its bank returns its slice's ingress credit, and
-    per-slice service counters feed the occupancy metrics."""
+    per-slice service counters feed the occupancy metrics.  Works on the
+    [NB] winner view (banks are slice-major: slice = bank // banks_per_slice,
+    precomputed as ``ctx["bank_slice"]``)."""
     NSL = c["NSL"]
-    # traced equivalent of address.slice_of_bank (numpy helpers cannot run
-    # under jit): banks are slice-major, so slice = bank // banks_per_slice
-    tgt = st["sl_bank"] // c["bps"]                         # [S] dest slice
-    remote = granted & (st["sl_hops"] > 0)
+    arb = wires["arb"]
+    has_win, whops = arb["has_win"], arb["whops"]
+    remote = has_win & (whops > 0)
     released = jax.ops.segment_sum(
-        remote.astype(jnp.int32), jnp.where(remote, tgt, NSL),
+        remote.astype(jnp.int32), jnp.where(remote, c["bank_slice"], NSL),
         num_segments=NSL + 1)[:-1]
-    slice_beats = st["slice_beats"] + jax.ops.segment_sum(
-        granted.astype(jnp.int32), jnp.where(granted, tgt, NSL),
+    slice_beats = st.slice_beats + jax.ops.segment_sum(
+        has_win.astype(jnp.int32), jnp.where(has_win, c["bank_slice"], NSL),
         num_segments=NSL + 1)[:-1]
-    return dict(st, ing_used=st["ing_used"] - released,
-                slice_beats=slice_beats,
-                remote_beats=st["remote_beats"]
-                + jnp.sum(remote.astype(jnp.int32)))
+    return st.replace(ing_used=st.ing_used - released,
+                      slice_beats=slice_beats,
+                      remote_beats=st.remote_beats + jnp.sum(released)), wires
 
 
-def _stage_return_bus(st, c):
+@register_stage("return_bus")
+def _stage_return_bus(st: SimState, wires, c):
     """Read-return bus: one beat per port per cycle, oldest-ready first
     (AXI5 read-data chunking ⇒ beats may return out of order across banks).
-    Write slots free immediately after grant (no return path)."""
-    X, S = c["X"], c["S"]
-    now = st["now"]
-    retq = (st["sl_busy"] == 2) & (st["sl_ready"] <= now) \
-        & (st["sl_write"] == 0)
-    rkey = jnp.clip(st["sl_ready"], 0, 2**20) * 1
-    rbest = jax.ops.segment_min(jnp.where(retq, rkey, 2**30),
-                                jnp.where(retq, c["master_of_slot"], X),
-                                num_segments=X + 1)[:-1]
-    ris = retq & (rkey == rbest[c["master_of_slot"]])
-    rwin = jax.ops.segment_min(jnp.where(ris, c["slot_ids"], S),
-                               jnp.where(ris, c["master_of_slot"], X),
-                               num_segments=X + 1)[:-1]
-    returned = ris & (c["slot_ids"] == rwin[c["master_of_slot"]])
-    sl_busy = jnp.where(returned, 0, st["sl_busy"])
-    beats_done = st["beats_done"] + jax.ops.segment_sum(
-        returned.astype(jnp.int32), c["master_of_slot"], num_segments=X)
+    Write slots free immediately after grant (no return path).  Dense over
+    the [X, P] layout: the per-port pick is a min-reduction along P."""
+    P = c["P"]
+    now = st.now
+    phase, write = unpack_slot_flags(st.sl_flags)
+    retq = (phase == SLOT_GRANTED) & (st.sl_ready <= now) & (write == 0)
+    rkey = jnp.clip(st.sl_ready, 0, 2**20)
+    rbest = jnp.min(jnp.where(retq, rkey, 2**30), axis=1, keepdims=True)
+    ris = retq & (rkey == rbest)
+    rwin = jnp.min(jnp.where(ris, c["pos"][None, :], P), axis=1,
+                   keepdims=True)                             # [X, 1]
+    returned = ris & (c["pos"][None, :] == rwin)
+    phase = jnp.where(returned, SLOT_IDLE, phase)
+    ret_any = jnp.any(returned, axis=1)
     # write slots free immediately after grant (no return path)
-    sl_busy = jnp.where((sl_busy == 2) & (st["sl_write"] == 1), 0, sl_busy)
-    return dict(st, sl_busy=sl_busy, beats_done=beats_done), returned
+    phase = jnp.where((phase == SLOT_GRANTED) & (write == 1), SLOT_IDLE,
+                      phase)
+    ret_txn = widen(st.sl_txn)[c["ar"], jnp.minimum(rwin[:, 0], P - 1)]
+    st = st.replace(sl_flags=pack_slot_flags(phase, write),
+                    beats_done=st.beats_done + ret_any.astype(jnp.int32))
+    return st, dict(wires, ret=dict(ret_any=ret_any, ret_txn=ret_txn))
 
 
-def _stage_retire(st, granted, returned, c):
+@register_stage("retire")
+def _stage_retire(st: SimState, wires, c):
     """Transaction completion + busy-cycle accounting: writes complete at
     the grant of their last beat, reads at their last return-bus beat; a
     port is busy while it has any accepted-but-incomplete transaction on
-    that AXI channel.  Advances the cycle counter."""
-    X, N = c["X"], c["N"]
+    that AXI channel.  Advances the cycle counter.
+
+    Beat-delivery decrements come from the cycle's grant/return winners
+    ([NB]- and [X]-sized scatter-adds) instead of slot-wide segment sums —
+    a granted write decrements its transaction at grant, a returned read at
+    its return-bus pick (≤ 1 per port per cycle)."""
     d = c["d"]
-    now = st["now"]
-    txn_seg = c["master_of_slot"] * N + st["sl_txn"]
-    rem_dec_w = jax.ops.segment_sum(
-        (granted & (st["sl_write"] == 1)).astype(jnp.int32),
-        txn_seg, num_segments=X * N).reshape(X, N)
-    rem_dec_r = jax.ops.segment_sum(
-        returned.astype(jnp.int32), txn_seg,
-        num_segments=X * N).reshape(X, N)
-    remaining = st["remaining"] - rem_dec_w - rem_dec_r
-    just_done = (remaining == 0) & (st["remaining"] > 0)
+    now = st.now
+    arb, ret = wires["arb"], wires["ret"]
+    rem_before = widen(st.remaining)
+    wdec = (arb["has_win"] & (arb["wwrite"] == 1)).astype(jnp.int32)
+    remaining = rem_before.at[arb["wmaster"], arb["wtxn"]].add(-wdec)
+    remaining = remaining.at[c["ar"], ret["ret_txn"]].add(
+        -ret["ret_any"].astype(jnp.int32))
+    just_done = (remaining == 0) & (rem_before > 0)
     complete = jnp.where(just_done, now + d["ret_latency"],
-                         st["complete_cycle"])
+                         st.complete_cycle)
     done_r = jnp.sum(just_done & (c["tx_write"] == 0), axis=1)
     done_w = jnp.sum(just_done & (c["tx_write"] == 1), axis=1)
-    outstanding = st["outstanding"].at[:, 0].add(-done_r) \
-        .at[:, 1].add(-done_w)
+    outstanding = st.outstanding - jnp.stack(
+        [done_r, done_w], axis=1).astype(st.outstanding.dtype)
     in_r = (outstanding[:, 0] > 0).astype(jnp.int32)
     in_w = (outstanding[:, 1] > 0).astype(jnp.int32)
-    return dict(st, now=now + 1, outstanding=outstanding,
-                remaining=remaining, complete_cycle=complete,
-                busy_r=st["busy_r"] + in_r, busy_w=st["busy_w"] + in_w,
-                busy_any=st["busy_any"] + jnp.maximum(in_r, in_w))
+    st = st.replace(now=now + 1, outstanding=outstanding,
+                    remaining=remaining.astype(st.remaining.dtype),
+                    complete_cycle=complete,
+                    busy_r=st.busy_r + in_r, busy_w=st.busy_w + in_w,
+                    busy_any=st.busy_any + jnp.maximum(in_r, in_w))
+    return st, wires
 
 
 def _core(tx_write, tx_burst, tx_banks, tx_hops, tx_ing, tx_start, tx_prio,
@@ -622,75 +736,47 @@ def _core(tx_write, tx_burst, tx_banks, tx_hops, tx_ing, tx_start, tx_prio,
     NB = prm.geom.num_banks
     NSL = prm.geom.num_slices
 
-    master_of_slot = jnp.repeat(jnp.arange(X, dtype=jnp.int32), P)
-
     dyn = jnp.asarray(dyn, jnp.int32)
     d = {name: dyn[i] for i, name in enumerate(DYN_FIELDS)}
 
-    tx_prio = jnp.clip(jnp.asarray(tx_prio, jnp.int32), 0, PRIO_LEVELS - 1)
+    tx_prio = jnp.clip(widen(tx_prio), 0, PRIO_LEVELS - 1)
+    ar = jnp.arange(X, dtype=jnp.int32)
+    pos = jnp.arange(P, dtype=jnp.int32)
 
     ctx = dict(
         X=X, N=N, P=P, S=S, NB=NB, NSL=NSL,
-        bps=prm.geom.banks_per_slice,
         AGE_CAP=_age_cap(prm, X),
         prm=prm, d=d,
-        master_of_slot=master_of_slot,
-        slot_ids=jnp.arange(S, dtype=jnp.int32),
-        slot_prio=tx_prio[master_of_slot],                   # [S]
+        ar=ar, pos=pos,
+        txn_ids=jnp.arange(N, dtype=jnp.int32)[None, :],
+        master_col=ar[:, None],
+        flat_ids=ar[:, None] * P + pos[None, :],             # [X, P]
+        bank_slice=jnp.arange(NB, dtype=jnp.int32)
+        // prm.geom.banks_per_slice,
+        slot_prio=tx_prio[:, None],                          # [X, 1]
         regulated=tx_prio >= REGULATED_PRIO,                 # [X]
         tx_write=tx_write, tx_burst=tx_burst, tx_banks=tx_banks,
         tx_hops=tx_hops, tx_ing=tx_ing, tx_start=tx_start,
     )
 
-    state = dict(
-        now=jnp.int32(0),
-        next_txn=jnp.zeros((X,), jnp.int32),
-        outstanding=jnp.zeros((X, 2), jnp.int32),  # [:,0] read, [:,1] write
-        credits=jnp.zeros((X, 2), jnp.int32) + d["split_buffer"],
-        beats_issued=jnp.zeros((X,), jnp.int32),
-        fwd_free=jnp.zeros((X,), jnp.int32),       # W-channel data-bus free time
-        reg_tokens=jnp.zeros((X,), jnp.int32) + d["reg_burst"] * REG_SCALE,
-        busy_r=jnp.zeros((X,), jnp.int32),         # cycles with a read in flight
-        busy_w=jnp.zeros((X,), jnp.int32),
-        busy_any=jnp.zeros((X,), jnp.int32),
-        # beat slots (ring per master, flattened [S])
-        sl_busy=jnp.zeros((S,), jnp.int32),
-        sl_bank=jnp.zeros((S,), jnp.int32),
-        sl_arrive=jnp.full((S,), INF32),           # at bank queue
-        sl_ready=jnp.full((S,), INF32),            # bank done, awaiting return
-        sl_txn=jnp.zeros((S,), jnp.int32),
-        sl_write=jnp.zeros((S,), jnp.int32),
-        sl_hops=jnp.zeros((S,), jnp.int32),        # inter-slice ring hops
-        bank_free=jnp.zeros((NB,), jnp.int32),
-        bank_rr=jnp.zeros((NB,), jnp.int32),
-        # inter-slice router state + per-slice service counters
-        ing_used=jnp.zeros((NSL,), jnp.int32),
-        slice_beats=jnp.zeros((NSL,), jnp.int32),
-        remote_beats=jnp.int32(0),
-        # per-txn bookkeeping
-        remaining=jnp.where(tx_burst > 0, tx_burst, 0).astype(jnp.int32),
-        accept_cycle=jnp.full((X, N), -1, jnp.int32),
-        complete_cycle=jnp.full((X, N), -1, jnp.int32),
-        beats_done=jnp.zeros((X,), jnp.int32),
-    )
+    state = init_state(X=X, N=N, P=P, NB=NB, NSL=NSL, tx_burst=tx_burst, d=d)
+    stage_fns = [STAGE_REGISTRY[name] for name in prm.pipeline()]
 
     def cycle(st, _):
-        st, acc = _stage_accept(st, ctx)
-        st = _stage_dispatch(st, acc, ctx)
-        st, granted = _stage_bank_arbitrate(st, ctx)
-        st = _stage_router_release(st, granted, ctx)
-        st, returned = _stage_return_bus(st, ctx)
-        st = _stage_retire(st, granted, returned, ctx)
+        wires: dict = {}
+        for fn in stage_fns:
+            st, wires = fn(st, wires, ctx)
         return st, None
 
     state, _ = jax.lax.scan(cycle, state, None, length=prm.max_cycles)
     return _metrics(state, tx_burst, tx_write, prm)
 
 
-def _metrics(st, burst, is_w, prm: SimParams) -> Dict[str, jnp.ndarray]:
+def _metrics(st: SimState, burst, is_w, prm: SimParams) -> Dict[str, jnp.ndarray]:
+    burst = widen(burst)
     real = burst > 0
-    done = st["complete_cycle"] >= 0
-    lat = (st["complete_cycle"] - st["accept_cycle"]).astype(jnp.float32)
+    done = st.complete_cycle >= 0
+    lat = (st.complete_cycle - st.accept_cycle).astype(jnp.float32)
     r = real & done & (is_w == 0)
     w = real & done & (is_w == 1)
     read_lat = jnp.where(r, lat, 0.0)
@@ -705,8 +791,8 @@ def _metrics(st, burst, is_w, prm: SimParams) -> Dict[str, jnp.ndarray]:
     # accepted-but-incomplete transaction on that channel — and reads as
     # achieved service rate regardless of the offered duty cycle.
     def tput(sel):
-        first = jnp.min(jnp.where(sel, st["accept_cycle"], INF32), axis=1)
-        last = jnp.max(jnp.where(sel, st["complete_cycle"], -1), axis=1)
+        first = jnp.min(jnp.where(sel, st.accept_cycle, INF32), axis=1)
+        last = jnp.max(jnp.where(sel, st.complete_cycle, -1), axis=1)
         beats = jnp.sum(jnp.where(sel, burst, 0), axis=1)
         span = jnp.maximum(last - first, 1).astype(jnp.float32)
         return jnp.where(jnp.sum(sel, 1) > 0, beats / span, 0.0)
@@ -719,15 +805,15 @@ def _metrics(st, burst, is_w, prm: SimParams) -> Dict[str, jnp.ndarray]:
     # granted-beat population for the remote fraction: remote_beats and
     # slice_beats are both counted at bank grant, so the ratio stays in
     # [0, 1] even when a run hits max_cycles without draining
-    granted_beats = jnp.sum(st["slice_beats"])
+    granted_beats = jnp.sum(st.slice_beats)
     return {
         "throughput": tput(real & done),
         "read_throughput": tput(r),
         "write_throughput": tput(w),
-        "throughput_busy": tput_busy(real & done, st["busy_any"]),
-        "read_throughput_busy": tput_busy(r, st["busy_r"]),
-        "write_throughput_busy": tput_busy(w, st["busy_w"]),
-        "busy_cycles": st["busy_any"],
+        "throughput_busy": tput_busy(real & done, st.busy_any),
+        "read_throughput_busy": tput_busy(r, st.busy_r),
+        "write_throughput_busy": tput_busy(w, st.busy_w),
+        "busy_cycles": st.busy_any,
         "read_lat_avg": jnp.where(jnp.sum(r, 1) > 0,
                                   jnp.sum(read_lat, 1) / n_r, 0.0),
         "read_lat_max": jnp.max(jnp.where(r, lat, 0.0), axis=1),
@@ -735,16 +821,16 @@ def _metrics(st, burst, is_w, prm: SimParams) -> Dict[str, jnp.ndarray]:
                                    jnp.sum(write_lat, 1) / n_w, 0.0),
         "write_lat_max": jnp.max(jnp.where(w, lat, 0.0), axis=1),
         "all_done": jnp.all(jnp.where(real, done, True)),
-        "beats_done": st["beats_done"],
-        "cycles": st["now"],
-        "complete_cycle": st["complete_cycle"],
-        "accept_cycle": st["accept_cycle"],
+        "beats_done": st.beats_done,
+        "cycles": st.now,
+        "complete_cycle": st.complete_cycle,
+        "accept_cycle": st.accept_cycle,
         # multi-slice fabric view: beats each slice's banks served, and how
         # much traffic crossed the inter-slice router (0 at num_slices=1)
-        "slice_beats": st["slice_beats"],
-        "remote_beats": st["remote_beats"],
+        "slice_beats": st.slice_beats,
+        "remote_beats": st.remote_beats,
         "remote_beat_fraction": jnp.where(
             granted_beats > 0,
-            st["remote_beats"] / jnp.maximum(granted_beats, 1)
+            st.remote_beats / jnp.maximum(granted_beats, 1)
             .astype(jnp.float32), 0.0),
     }

@@ -1,0 +1,3 @@
+"""Per-bank QoS arbitration comparator tree (reference + Pallas TPU kernel)."""
+from repro.kernels.bank_arbiter.ops import bank_arbiter_winners  # noqa: F401
+from repro.kernels.bank_arbiter.ref import bank_arbiter_ref  # noqa: F401

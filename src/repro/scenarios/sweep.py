@@ -40,6 +40,7 @@ as one logical master by both isolation checks.
 """
 from __future__ import annotations
 
+import time
 import warnings
 from dataclasses import dataclass, field, replace
 from typing import Dict, List, Optional, Sequence
@@ -101,6 +102,10 @@ class SweepResult:
     per_class: Dict[str, Dict[str, float]]
     isolation: Dict[str, object]
     slices: Dict[str, object] = field(default_factory=dict)
+    #: sweep-level simulation rate (shared by every point of one call):
+    #: wall_s, sim_cycles_per_sec (simulated fabric cycles / wall second,
+    #: summed over the batch — cf. benchmarks/sim_speed.py), batched
+    sim_rate: Dict[str, object] = field(default_factory=dict)
 
     def summary(self) -> Dict[str, object]:
         return {
@@ -111,6 +116,7 @@ class SweepResult:
             "per_class": self.per_class,
             "isolation": self.isolation,
             "slices": self.slices,
+            "sim_rate": self.sim_rate,
         }
 
 
@@ -288,14 +294,19 @@ def simulate_compiled(compiled: CompiledScenario, prms: Sequence[SimParams],
         return []
     env = batch_envelope(list(prms))
     pinned = [replace(p, slots_override=env.slots_per_master) for p in prms]
+    t0 = time.perf_counter()
     if batched and len(pinned) > 1:
         stacked = simulate_batch([compiled.trace] * len(pinned), pinned)
         per_point = [{k: np.asarray(v)[i] for k, v in stacked.items()}
                      for i in range(len(pinned))]
     else:
         per_point = [simulate(compiled.trace, p) for p in pinned]
-    return [summarize_compiled(compiled, p, met)
-            for p, met in zip(pinned, per_point)]
+    rate = _sim_rate(pinned, time.perf_counter() - t0, batched)
+    out = [summarize_compiled(compiled, p, met)
+           for p, met in zip(pinned, per_point)]
+    for r in out:
+        r.sim_rate = rate
+    return out
 
 
 def run_sweep(points: Sequence[SweepPoint], *,
@@ -323,6 +334,7 @@ def run_sweep(points: Sequence[SweepPoint], *,
     # pin every point to the envelope ring size so batched == sequential
     prms = [replace(p.params, slots_override=env.slots_per_master)
             for p in points]
+    t0 = time.perf_counter()
     if batched:
         stacked = simulate_batch(padded, prms)
         per_point = [
@@ -330,6 +342,7 @@ def run_sweep(points: Sequence[SweepPoint], *,
             for i in range(len(points))]
     else:
         per_point = [simulate(t, p) for t, p in zip(padded, prms)]
+    rate = _sim_rate(prms, time.perf_counter() - t0, batched)
     out = []
     for comp, prm, met, pad in zip(compiled, prms, per_point, padded):
         # class stats index by the ORIGINAL master rows; padding rows are
@@ -337,5 +350,17 @@ def run_sweep(points: Sequence[SweepPoint], *,
         comp_for_stats = CompiledScenario(comp.scenario, pad, comp.regions,
                                           comp.qos, comp.priorities,
                                           comp.deadlines, comp.share_groups)
-        out.append(summarize_compiled(comp_for_stats, prm, met))
+        res = summarize_compiled(comp_for_stats, prm, met)
+        res.sim_rate = rate
+        out.append(res)
     return out
+
+
+def _sim_rate(prms: Sequence[SimParams], wall_s: float,
+              batched: bool) -> Dict[str, object]:
+    """Sweep-level simulated-cycles/sec (includes JIT on a cold cache —
+    compare against ``benchmarks/sim_speed.py`` for the steady-state rate)."""
+    cycles = sum(p.max_cycles for p in prms)
+    return {"wall_s": round(wall_s, 3),
+            "sim_cycles_per_sec": round(cycles / max(wall_s, 1e-9), 1),
+            "batched": batched}

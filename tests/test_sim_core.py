@@ -1,0 +1,235 @@
+"""Packed-state cycle core: stage registry, SimState dtypes, and the
+bank-arbiter kernel's grant-for-grant parity with the arbitration stage.
+
+The hypothesis property test is skipped where hypothesis is absent; the
+randomized parity sweeps below it cover the same contract everywhere.
+"""
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.qos import arbitration_priority_key
+from repro.core.simulator import (DEFAULT_PIPELINE, STAGE_REGISTRY, SimParams,
+                                  Trace, _age_cap, register_stage, simulate)
+from repro.core.state import (SimState, bank_dtype, init_state,
+                              pack_slot_flags, txn_dtype, unpack_slot_flags)
+from repro.kernels.bank_arbiter.ops import bank_arbiter_winners
+from repro.kernels.bank_arbiter.ref import bank_arbiter_ref
+
+
+def _random_arb_inputs(rng, S, NB, age_cap, X):
+    level = rng.integers(0, 8, S)
+    age = rng.integers(0, min(age_cap + 1, 4096), S)
+    rr = rng.integers(0, X, S)
+    key = arbitration_priority_key(level, age, rr, age_cap=age_cap,
+                                  num_masters=X)
+    bank = rng.integers(0, NB, S)
+    elig = rng.random(S) < 0.4
+    return (jnp.asarray(key, jnp.int32), jnp.asarray(bank, jnp.int32),
+            jnp.asarray(elig))
+
+
+# ---------------------------------------------------------------------------
+# bank-arbiter kernel parity (interpret mode — the CPU fallback path)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("S,NB,X", [(64, 16, 4), (256, 256, 8),
+                                    (2048, 256, 16), (300, 130, 8)])
+def test_bank_arbiter_kernel_matches_ref(S, NB, X, rng):
+    age_cap = _age_cap(SimParams(), X)
+    for trial in range(3):
+        key, bank, elig = _random_arb_inputs(rng, S, NB, age_cap, X)
+        ref = bank_arbiter_winners(key, bank, elig, num_banks=NB,
+                                   backend="jax")
+        ker = bank_arbiter_winners(key, bank, elig, num_banks=NB,
+                                   backend="pallas")
+        np.testing.assert_array_equal(np.asarray(ref), np.asarray(ker))
+
+
+def test_bank_arbiter_no_eligible_slots_sentinel():
+    S, NB = 32, 8
+    key = jnp.zeros((S,), jnp.int32)
+    bank = jnp.zeros((S,), jnp.int32)
+    none = jnp.zeros((S,), bool)
+    for backend in ("jax", "pallas"):
+        win = bank_arbiter_winners(key, bank, none, num_banks=NB,
+                                   backend=backend)
+        np.testing.assert_array_equal(np.asarray(win), np.full(NB, S))
+
+
+def test_bank_arbiter_vmap_parity(rng):
+    S, NB, X = 128, 32, 4
+    age_cap = _age_cap(SimParams(), X)
+    batches = [_random_arb_inputs(rng, S, NB, age_cap, X) for _ in range(4)]
+    key = jnp.stack([b[0] for b in batches])
+    bank = jnp.stack([b[1] for b in batches])
+    elig = jnp.stack([b[2] for b in batches])
+    run = lambda be: jax.vmap(  # noqa: E731
+        lambda k, b, e: bank_arbiter_winners(k, b, e, num_banks=NB,
+                                             backend=be))(key, bank, elig)
+    np.testing.assert_array_equal(np.asarray(run("jax")),
+                                  np.asarray(run("pallas")))
+
+
+def test_bank_arbiter_unknown_backend_raises():
+    z = jnp.zeros((8,), jnp.int32)
+    with pytest.raises(ValueError, match="unknown bank-arbiter backend"):
+        bank_arbiter_winners(z, z, z > 0, num_banks=4, backend="verilog")
+
+
+def test_bank_arbiter_hypothesis_parity():
+    pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=30, deadline=None)
+    @given(data=st.data(),
+           S=st.integers(min_value=1, max_value=200),
+           NB=st.integers(min_value=1, max_value=64))
+    def prop(data, S, NB):
+        key = np.array(data.draw(st.lists(
+            st.integers(min_value=0, max_value=2**29),
+            min_size=S, max_size=S)), np.int32)
+        bank = np.array(data.draw(st.lists(
+            st.integers(min_value=0, max_value=NB - 1),
+            min_size=S, max_size=S)), np.int32)
+        elig = np.array(data.draw(st.lists(st.booleans(),
+                                           min_size=S, max_size=S)))
+        ref = bank_arbiter_ref(jnp.asarray(key), jnp.asarray(bank),
+                               jnp.asarray(elig), num_banks=NB)
+        ker = bank_arbiter_winners(jnp.asarray(key), jnp.asarray(bank),
+                                   jnp.asarray(elig), num_banks=NB,
+                                   backend="pallas")
+        np.testing.assert_array_equal(np.asarray(ref), np.asarray(ker))
+        # the contract itself: each winner is the eligible min-key slot of
+        # its bank, lowest slot id on ties; S where the bank is empty
+        win = np.asarray(ref)
+        for b in range(NB):
+            slots = np.nonzero(elig & (bank == b))[0]
+            if len(slots) == 0:
+                assert win[b] == S
+            else:
+                best = slots[np.argmin(key[slots])]  # argmin: first minimum
+                assert win[b] == best
+
+    prop()
+
+
+def test_full_sim_pallas_arbiter_bit_exact(rng):
+    """Grant-for-grant equivalence end to end: every metric (completion
+    cycles included) matches between the jax and Pallas arbiter backends."""
+    X, N = 8, 8
+    t = Trace(is_write=rng.integers(0, 2, (X, N)),
+              burst=rng.integers(1, 13, (X, N)),
+              addr=rng.integers(0, 4000, (X, N)),
+              prio=rng.integers(0, 4, X))
+    prm = SimParams(max_cycles=2500, qos_aging=32, reg_rate=64)
+    a = simulate(t, prm)
+    b = simulate(t, replace(prm, arbiter="pallas"))
+    for k in a:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]),
+                                      err_msg=k)
+
+
+# ---------------------------------------------------------------------------
+# stage registry
+# ---------------------------------------------------------------------------
+
+def _small_trace(rng, X=4, N=5):
+    return Trace(is_write=rng.integers(0, 2, (X, N)),
+                 burst=rng.integers(1, 9, (X, N)),
+                 addr=rng.integers(0, 3000, (X, N)))
+
+
+def test_default_pipeline_registered():
+    assert set(DEFAULT_PIPELINE) <= set(STAGE_REGISTRY)
+    assert SimParams().pipeline() == DEFAULT_PIPELINE
+
+
+def test_unknown_stage_rejected():
+    with pytest.raises(ValueError, match="unknown stage"):
+        SimParams(stages=("accept", "teleport")).pipeline()
+
+
+def test_explicit_default_pipeline_matches_implicit(rng):
+    t = _small_trace(rng)
+    a = simulate(t, SimParams(max_cycles=1500))
+    b = simulate(t, SimParams(max_cycles=1500, stages=DEFAULT_PIPELINE))
+    for k in a:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]),
+                                      err_msg=k)
+
+
+def test_registered_stage_is_swappable(rng):
+    """A stage added by configuration runs inside the scan: an observer
+    stage that rewrites a state field is visible in the outputs."""
+    @register_stage("test_freeze_clock")
+    def freeze(st, wires, ctx):
+        return st.replace(now=st.now - 1), wires  # cancel retire's +1
+
+    try:
+        t = _small_trace(rng)
+        out = simulate(t, SimParams(
+            max_cycles=50, stages=DEFAULT_PIPELINE + ("test_freeze_clock",)))
+        assert int(out["cycles"]) == 0      # clock never advanced
+        assert not bool(out["all_done"])    # and nothing ever completed
+    finally:
+        del STAGE_REGISTRY["test_freeze_clock"]
+
+
+def test_pipeline_is_static_key():
+    base = SimParams()
+    assert base.static_key() != replace(
+        base, stages=("accept", "retire")).static_key()
+    assert base.static_key() != replace(base, arbiter="pallas").static_key()
+
+
+# ---------------------------------------------------------------------------
+# SimState packing + validation
+# ---------------------------------------------------------------------------
+
+def test_slot_flags_roundtrip():
+    phase = jnp.array([[0, 1, 2, 0]], jnp.int32)
+    write = jnp.array([[1, 0, 1, 0]], jnp.int32)
+    flags = pack_slot_flags(phase, write)
+    assert flags.dtype == jnp.uint8
+    p2, w2 = unpack_slot_flags(flags)
+    assert p2.dtype == jnp.int32 and w2.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(p2), np.asarray(phase))
+    np.testing.assert_array_equal(np.asarray(w2), np.asarray(write))
+
+
+def test_dtype_pickers():
+    assert bank_dtype(256) == jnp.int16
+    assert bank_dtype(2**15 - 1) == jnp.int32
+    assert txn_dtype(100) == jnp.int16
+    assert txn_dtype(2**16) == jnp.int32
+
+
+def test_init_state_narrow_dtypes():
+    d = {"split_buffer": jnp.int32(64), "reg_burst": jnp.int32(16)}
+    st = init_state(X=4, N=6, P=32, NB=256, NSL=1,
+                    tx_burst=jnp.ones((4, 6), jnp.int8), d=d)
+    assert isinstance(st, SimState)
+    assert st.sl_flags.dtype == jnp.uint8
+    assert st.sl_hops.dtype == jnp.int8
+    assert st.remaining.dtype == jnp.int8
+    assert st.outstanding.dtype == jnp.int16
+    assert st.credits.dtype == jnp.int16
+    assert st.sl_bank.dtype == jnp.int16
+    assert st.sl_arrive.dtype == jnp.int32
+    # and it is a pytree the scan can carry
+    leaves = jax.tree_util.tree_leaves(st)
+    assert len(leaves) == 25
+
+
+def test_param_width_validation():
+    with pytest.raises(ValueError, match="int16 credit counters"):
+        SimParams(split_buffer=2**14).dyn_vector()
+    with pytest.raises(ValueError, match="max_burst"):
+        simulate(Trace(is_write=np.zeros((1, 1), int),
+                       burst=np.full((1, 1), 200),
+                       addr=np.zeros((1, 1), int)),
+                 SimParams(max_burst=200))
