@@ -47,6 +47,7 @@ def main() -> None:
 
     from benchmarks import paper_figures as F
     from benchmarks.qos_isolation import qos_isolation_sweep
+    from benchmarks.scale_sweep import scale_sweep
     from benchmarks.scenario_sweep import scenario_sweep
     from benchmarks.serving_cosim import serving_cosim
     from benchmarks.slice_scaling import slice_scaling_bench
@@ -78,6 +79,10 @@ def main() -> None:
         # occupancy 32), which is a capacity result, not an isolation one
         ("serving_cosim", lambda: serving_cosim(
             num_requests=32 if args.full else 24)),
+        # streaming/chunked grid scaling (the CI scale-smoke job runs the
+        # same module standalone at >= 10k points under an RSS cap)
+        ("scale_sweep", lambda: scale_sweep(
+            points=2048 if args.full else 512, chunk=256)),
     ]
     valid = [j[0] for j in jobs]
     if args.list:
@@ -146,6 +151,13 @@ def main() -> None:
         v_path.write_text(json.dumps(
             results["serving_cosim"]["results"], indent=1, default=str))
         print(f"# wrote {v_path}")
+
+    # chunked-scaling summary, likewise uploaded by CI
+    if "scale_sweep" in results:
+        g_path = Path("experiments/scale_sweep_summary.json")
+        g_path.write_text(json.dumps(
+            results["scale_sweep"]["results"], indent=1, default=str))
+        print(f"# wrote {g_path}")
 
 
 if __name__ == "__main__":

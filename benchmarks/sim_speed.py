@@ -57,16 +57,22 @@ def _workload(batch: int, masters: int, txns: int, burst: int, seed: int):
 def measure_point(batch: int, *, masters: int = 8, txns: int = 24,
                   burst: int = 8, max_cycles: int = DEFAULT_CYCLES,
                   seed: int = 0) -> Dict[str, float]:
-    """One (batch width) measurement: compile time and steady-state rate.
+    """One (batch width) measurement: compile time, steady-state rate, and
+    the batch's live memory footprint.
 
-    Returns ``{compile_s, run_s, cycles_per_sec, batch, max_cycles}``.  The
-    workload is deliberately *undrained-agnostic*: the scan always runs
-    ``max_cycles`` iterations regardless of traffic, so the rate is a pure
-    property of the cycle body, not of the trace.
+    Returns ``{compile_s, run_s, cycles_per_sec, batch, max_cycles,
+    input_bytes, carry_bytes}``.  The workload is deliberately
+    *undrained-agnostic*: the scan always runs ``max_cycles`` iterations
+    regardless of traffic, so the rate is a pure property of the cycle body,
+    not of the trace.  ``input_bytes``/``carry_bytes`` are the peak live
+    prepared-input and scan-carry bytes of the whole batch (shape-only
+    accounting via ``core.simulator.input_nbytes``/``carry_nbytes`` — the
+    quantities a 100k-point grid multiplies).
     """
     import jax
 
-    from repro.core.simulator import simulate_batch
+    from repro.core.simulator import (carry_nbytes, input_nbytes,
+                                      simulate_batch)
 
     traces, SimParams = _workload(batch, masters, txns, burst, seed)
     prms = [SimParams(max_cycles=max_cycles)] * batch
@@ -87,6 +93,8 @@ def measure_point(batch: int, *, masters: int = 8, txns: int = 24,
         "compile_s": round(max(t1 - t0 - run_s, 0.0), 3),
         "run_s": round(run_s, 4),
         "cycles_per_sec": round(batch * max_cycles / run_s, 1),
+        "input_bytes": sum(input_nbytes(t, p) for t, p in zip(traces, prms)),
+        "carry_bytes": sum(carry_nbytes(p, masters, txns) for p in prms),
     }
 
 
@@ -113,6 +121,8 @@ def sim_speed_bench(batch_widths: Sequence[int] = BATCH_WIDTHS,
         "date": time.strftime("%Y-%m-%d"),
         "commit": _git_commit(),
         "cycles_per_sec": {b: detail[b]["cycles_per_sec"] for b in detail},
+        "footprint_bytes": {b: detail[b]["input_bytes"]
+                            + detail[b]["carry_bytes"] for b in detail},
         "detail": detail,
     }
 
@@ -121,7 +131,12 @@ def check_regression(new: Dict[str, object],
                      baseline_path: Path = BENCH_PATH,
                      tolerance: float = 0.20) -> Optional[str]:
     """None when every batch width is within ``tolerance`` of the committed
-    baseline (or no baseline exists yet); else a human-readable failure."""
+    baseline (or no baseline exists yet); else a human-readable failure.
+
+    Two gates per width: cycles/sec may not DROP more than ``tolerance``
+    below baseline, and the live input+carry footprint may not GROW more
+    than ``tolerance`` above it (the footprint is deterministic, so any
+    growth is a real carry/input regression, not noise)."""
     if not baseline_path.exists():
         return None
     base = json.loads(baseline_path.read_text())
@@ -130,6 +145,15 @@ def check_regression(new: Dict[str, object],
         if old and rate < (1.0 - tolerance) * float(old):
             return (f"cycles/sec regression at batch {width}: "
                     f"{rate:.0f} < {(1 - tolerance) * float(old):.0f} "
+                    f"(baseline {float(old):.0f} from "
+                    f"{base.get('commit', '?')} {base.get('date', '?')}, "
+                    f"tolerance {tolerance:.0%})")
+    for width, nbytes in new.get("footprint_bytes", {}).items():
+        old = base.get("footprint_bytes", {}).get(width)
+        if old and float(nbytes) > (1.0 + tolerance) * float(old):
+            return (f"memory-footprint regression at batch {width}: "
+                    f"{nbytes} bytes > "
+                    f"{(1 + tolerance) * float(old):.0f} "
                     f"(baseline {float(old):.0f} from "
                     f"{base.get('commit', '?')} {base.get('date', '?')}, "
                     f"tolerance {tolerance:.0%})")

@@ -124,6 +124,73 @@ def _hash32(x):
     return x
 
 
+def _hash32_dev(x):
+    """Traced (jnp) twin of :func:`_hash32` — identical uint32 avalanche, but
+    tracer-safe for use *inside* the simulator's scan (the event-schedule
+    path computes bank targets per cycle instead of precomputing [X, N, mb]
+    tables on the host).  Parity with the numpy path is property-tested."""
+    import jax.numpy as jnp
+
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x9E3779B1)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(0x85EBCA77)
+    x = x ^ (x >> 16)
+    return x
+
+
+def slice_of_beat_dev(beat_addr, geom: MemoryGeometry = MemoryGeometry()):
+    """Traced twin of :func:`slice_of_beat` (int32 arithmetic; exact because
+    every hash contribution is reduced mod its divisor in uint32 *before*
+    entering the signed domain)."""
+    import jax.numpy as jnp
+
+    a = jnp.asarray(beat_addr, jnp.int32)
+    nsl = geom.num_slices
+    if nsl == 1:
+        return jnp.zeros_like(a), a
+    if geom.slice_policy == "region":
+        bps = geom.beats_per_slice
+        return a // bps, a % bps
+    g = geom.slice_granule
+    chunk = a // g
+    rnd = chunk // nsl
+    hm = (_hash32_dev(rnd) % jnp.uint32(nsl)).astype(jnp.int32)
+    sl = (chunk % nsl + hm) % nsl
+    local = rnd * g + a % g
+    return sl, local
+
+
+def _map_beat_local_dev(local_addr, geom: MemoryGeometry):
+    """Traced twin of :func:`_map_beat_local` (same mod-before-sign trick)."""
+    import jax.numpy as jnp
+
+    a = jnp.asarray(local_addr, jnp.int32)
+    mc = geom.num_clusters
+    na = geom.arrays_per_cluster
+    kb = geom.banks_per_array
+    cluster = a % mc
+    arr = (a // mc) % na
+    hi1 = a // (mc * na)
+    h1 = (_hash32_dev(hi1) % jnp.uint32(na)).astype(jnp.int32)
+    arr = (arr + h1) % na
+    bank = hi1 % kb
+    hi2 = hi1 // kb
+    h2 = (_hash32_dev(hi2 + 0x5bd1) % jnp.uint32(kb)).astype(jnp.int32)
+    bank = (bank + h2) % kb
+    return cluster, arr, bank
+
+
+def flat_bank_id_dev(beat_addr, geom: MemoryGeometry = MemoryGeometry()):
+    """Traced twin of :func:`flat_bank_id` — the in-scan bank mapping the
+    event-schedule pipeline uses (``banking="paper"`` only)."""
+    sl, local = slice_of_beat_dev(beat_addr, geom)
+    c, a, b = _map_beat_local_dev(local, geom)
+    flat = (c * geom.arrays_per_cluster + a) * geom.banks_per_array + b
+    return sl * geom.banks_per_slice + flat
+
+
 def slice_of_beat(beat_addr, geom: MemoryGeometry = MemoryGeometry()):
     """Slice-select level above the cluster split: beat address →
     ``(slice, slice_local_addr)``.

@@ -1,0 +1,225 @@
+"""Streaming P² quantile accumulators — fixed-size latency summaries.
+
+The exact collection path materializes one ``int32`` acceptance + completion
+timestamp per transaction (``[X, N]`` each), which is what caps sweep grids:
+a 100k-point batch of 4k-transaction traces would carry gigabytes of
+per-request latencies just to report three percentiles per class.  This
+module replaces that with the P² algorithm (Jain & Chlamtac, CACM 1985): a
+**five-marker** piecewise-parabolic estimate of each tracked quantile, updated
+online in O(1) state per (metric × class × direction) group — the scan carries
+``5`` heights + ``5`` marker positions + one count per group, nothing sized by
+the transaction count.
+
+Batched-arrival variant
+-----------------------
+The simulator completes up to ``X × F`` transactions per cycle (several write
+bursts of one port can finish together), so :func:`p2_update` ingests a whole
+masked observation vector per call instead of one sample:
+
+  * marker positions advance by the *count* of observations below each marker
+    (the classic algorithm's unit increments, summed);
+  * each inner marker then takes up to :data:`ADJUST_PASSES` unit
+    parabolic/linear adjustment steps per call (the classic algorithm takes
+    one per observation);
+  * while a group has seen fewer than 5 observations the heights double as a
+    sorted sample buffer; the call that crosses 5 seeds the markers from the
+    order statistics of everything seen so far.
+
+Error bound (documented contract, tested in ``tests/test_streaming.py``)
+------------------------------------------------------------------------
+For a group with ``count >= P2_MIN_SAMPLES`` observations, the estimate for
+the ``p``-th percentile lies within the *rank band*
+
+    [ numpy.percentile(sample, max(p - P2_RANK_TOL_PCT, 0)),
+      numpy.percentile(sample, min(p + P2_RANK_TOL_PCT, 100)) ]
+
+(widened by ``P2_REL_TOL`` relative slack for float accumulation), and always
+within ``[min(sample), max(sample)]``.  Below ``P2_MIN_SAMPLES`` the p50
+estimate is exact order-statistic interpolation while tail estimates degrade
+toward the sample extremes — small groups should be summarized exactly.
+Merging across batch lanes (:func:`p2_merge_quantile`) interpolates the
+count-weighted mixture of the per-lane marker CDFs; the merged estimate adds
+at most one inter-marker band of error on top of the per-lane bound.
+
+Everything here is pure: jnp for the in-scan update, numpy for the host-side
+summary/merge helpers.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import numpy as np
+
+#: percentiles every streaming run tracks (matches ``scenarios.sweep``)
+STREAM_PCTS: Tuple[float, ...] = (50.0, 95.0, 99.0)
+
+#: documented rank tolerance of the streaming estimate, percentile points
+P2_RANK_TOL_PCT = 10.0
+#: relative slack on the rank band (float32 accumulation)
+P2_REL_TOL = 5e-3
+#: sample count below which the documented bound does not apply
+P2_MIN_SAMPLES = 40
+
+#: unit marker adjustments per batched update call (classic P² does one per
+#: observation; per-cycle batches are small, so a few passes track them)
+ADJUST_PASSES = 3
+
+#: large-but-finite filler for empty buffer slots (float32-safe)
+_FILL = np.float32(3.0e38)
+
+
+def _jnp():
+    import jax.numpy as jnp
+    return jnp
+
+
+def p2_desired_fracs(qs: Sequence[float]):
+    """[NQ, 5] marker CDF positions (0, q/2, q, (1+q)/2, 1) per quantile."""
+    q = np.asarray(qs, np.float32)
+    return np.stack([np.zeros_like(q), q / 2, q, (1 + q) / 2,
+                     np.ones_like(q)], axis=-1)
+
+
+def p2_init(num_groups: int, num_q: int):
+    """Zero-observation state: (heights [G, NQ, 5], marker positions
+    [G, NQ, 5], counts [G]) — heights start at the empty-slot filler."""
+    jnp = _jnp()
+    return (jnp.full((num_groups, num_q, 5), _FILL, jnp.float32),
+            jnp.tile(jnp.arange(1.0, 6.0, dtype=jnp.float32),
+                     (num_groups, num_q, 1)),
+            jnp.zeros((num_groups,), jnp.int32))
+
+
+def _adjust_once(h, n, desired, active):
+    """One unit adjustment pass over the inner markers (i = 1, 2, 3)."""
+    jnp = _jnp()
+    for i in (1, 2, 3):
+        d = desired[:, :, i] - n[:, :, i]
+        nl, ni, nr = n[:, :, i - 1], n[:, :, i], n[:, :, i + 1]
+        hl, hi, hr = h[:, :, i - 1], h[:, :, i], h[:, :, i + 1]
+        s = jnp.where((d >= 1) & (nr - ni > 1), 1.0,
+                      jnp.where((d <= -1) & (nl - ni < -1), -1.0, 0.0))
+        move = (s != 0) & active[:, None]
+
+        def safe(x):
+            return jnp.where(x == 0, 1.0, x)
+
+        par = hi + s / safe(nr - nl) * (
+            (ni - nl + s) * (hr - hi) / safe(nr - ni)
+            + (nr - ni - s) * (hi - hl) / safe(ni - nl))
+        lin_n = jnp.where(s > 0, nr, nl)
+        lin_h = jnp.where(s > 0, hr, hl)
+        lin = hi + s * (lin_h - hi) / safe(lin_n - ni)
+        new_h = jnp.where((hl < par) & (par < hr), par, lin)
+        h = h.at[:, :, i].set(jnp.where(move, new_h, hi))
+        n = n.at[:, :, i].set(jnp.where(move, ni + s, ni))
+    return h, n
+
+
+def p2_update(height, npos, count, values, gid, mask, *,
+              qs: Sequence[float] = STREAM_PCTS):
+    """Ingest one masked batch of observations into every group at once.
+
+    ``height``/``npos``: [G, NQ, 5] float32, ``count``: [G] int32 (the state
+    from :func:`p2_init`), ``values``: [M] float32 observations, ``gid``:
+    [M] int32 group per observation, ``mask``: [M] bool.  Returns the updated
+    (height, npos, count).  Pure jnp — traceable inside the scan.
+    """
+    jnp = _jnp()
+    G, NQ, _ = height.shape
+    frac = jnp.asarray(p2_desired_fracs([q / 100.0 for q in qs]))  # [NQ, 5]
+    onehot = mask[None, :] & (gid[None, :] == jnp.arange(G)[:, None])  # [G,M]
+    k = jnp.sum(onehot, axis=1)                                    # [G]
+    total = count + k
+    vals_g = jnp.where(onehot, values[None, :], _FILL)             # [G, M]
+
+    # --- steady path (count >= 5): counted marker advance + adjustment ---
+    gmin = jnp.min(vals_g, axis=1)
+    gmax = jnp.max(jnp.where(onehot, values[None, :], -_FILL), axis=1)
+    h = height.at[:, :, 0].set(
+        jnp.minimum(height[:, :, 0], gmin[:, None]))
+    h = h.at[:, :, 4].set(jnp.maximum(height[:, :, 4],
+                                      jnp.where(k > 0, gmax, -_FILL)[:, None]))
+    # observations strictly below an inner marker advance its position;
+    # every observation advances the max marker (classic increments i>k)
+    below = (values[None, None, None, :] < height[:, :, 1:4, None]) \
+        & onehot[:, None, None, :]                                  # [G,NQ,3,M]
+    n = npos.at[:, :, 1:4].add(jnp.sum(below, axis=-1).astype(jnp.float32))
+    n = n.at[:, :, 4].add(k[:, None].astype(jnp.float32))
+    desired = 1.0 + frac[None] * (total[:, None, None] - 1.0)
+    active = k > 0
+    for _ in range(ADJUST_PASSES):
+        h, n = _adjust_once(h, n, desired, active)
+
+    # --- init path (count < 5): sorted buffer, seed markers on crossing ---
+    slot_live = jnp.arange(5)[None, :] < count[:, None]
+    buf = jnp.concatenate(
+        [jnp.where(slot_live, height[:, 0, :], _FILL), vals_g], axis=1)
+    sbuf = jnp.sort(buf, axis=1)                                   # [G, 5+M]
+    tc = jnp.maximum(total, 1)
+    idx = jnp.clip(jnp.round(frac[None] * (tc[:, None, None] - 1.0)),
+                   0, (tc - 1)[:, None, None]).astype(jnp.int32)   # [G,NQ,5]
+    picked = sbuf[jnp.arange(G)[:, None, None], idx]
+    crossed = (total >= 5)[:, None, None]
+    init_h = jnp.where(crossed, picked,
+                       sbuf[:, None, :5] * jnp.ones((1, NQ, 1)))
+    init_n = jnp.where(crossed, idx.astype(jnp.float32) + 1.0,
+                       jnp.arange(1.0, 6.0)[None, None, :])
+
+    use_init = (count < 5)[:, None, None]
+    return (jnp.where(use_init, init_h, h),
+            jnp.where(use_init, init_n, n),
+            total)
+
+
+def p2_quantiles(height, npos, count, *,
+                 qs: Sequence[float] = STREAM_PCTS) -> np.ndarray:
+    """Host-side read-out: [G, NQ] estimates (NaN for empty groups).
+
+    Groups still in the init regime (< 5 observations) interpolate their
+    sorted sample buffer exactly; steady groups report the central marker.
+    """
+    h = np.asarray(height, np.float64)
+    c = np.asarray(count)
+    G, NQ, _ = h.shape
+    out = np.full((G, NQ), np.nan)
+    for g in range(G):
+        if c[g] <= 0:
+            continue
+        if c[g] < 5:
+            buf = np.sort(h[g, 0, :])[:c[g]]
+            out[g] = [np.percentile(buf, q) for q in qs]
+        else:
+            out[g] = h[g, :, 2]
+    return out
+
+
+def p2_merge_quantile(heights, nposs, counts, q: float) -> float:
+    """Merge per-lane P² states into one quantile estimate (host-side).
+
+    ``heights``/``nposs``: [B, 5] (one tracked quantile's markers per lane),
+    ``counts``: [B].  Each lane's markers define a piecewise-linear CDF
+    (height_j at rank npos_j / count); the merged estimate inverts the
+    count-weighted mixture of those CDFs at ``q`` (a fraction in [0, 1]).
+    """
+    h = np.asarray(heights, np.float64)
+    n = np.asarray(nposs, np.float64)
+    c = np.asarray(counts, np.float64)
+    live = c > 0
+    if not live.any():
+        return float("nan")
+    h, n, c = h[live], n[live], c[live]
+    # init-regime lanes: markers past the count are filler — clamp their
+    # CDF to the populated prefix
+    xs = np.unique(np.concatenate([
+        hk[:max(int(min(ck, 5)), 1)] for hk, ck in zip(np.sort(h, axis=1), c)]))
+    cdf = np.zeros_like(xs)
+    for hk, nk, ck in zip(h, n, c):
+        m = max(int(min(ck, 5)), 1)
+        hk, nk = hk[:m], nk[:m]
+        order = np.argsort(hk, kind="stable")
+        cdf += ck * np.interp(xs, hk[order],
+                              np.maximum.accumulate(nk[order]) / ck,
+                              left=0.0, right=1.0)
+    cdf /= c.sum()
+    return float(np.interp(q, cdf, xs))

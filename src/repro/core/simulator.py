@@ -99,8 +99,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.address import (MemoryGeometry, flat_bank_id,
-                                master_home_slices, slice_of_bank,
-                                slice_of_beat)
+                                flat_bank_id_dev, master_home_slices,
+                                slice_of_bank, slice_of_beat,
+                                slice_of_beat_dev)
+from repro.core.percentile import STREAM_PCTS, p2_update
 from repro.core.qos import aging_boost, arbitration_priority_key
 from repro.core.state import (INF32, SLOT_GRANTED, SLOT_IDLE, SLOT_WAITING,
                               SimState, bank_dtype, init_state,
@@ -125,6 +127,13 @@ REG_SCALE = 256
 MAX_BURST_LIMIT = 127
 #: ``outstanding``/``split_buffer`` ceiling — credit counters are int16
 CREDIT_LIMIT = 2**14
+
+#: streaming-collection QoS class slots: the three QOS_CLASSES in their
+#: canonical order plus one trailing "unclassified" slot (padding rows,
+#: schedules compiled without class info)
+STREAM_CLASSES = 4
+#: class index of the trailing unclassified slot
+UNCLASSIFIED = STREAM_CLASSES - 1
 
 
 @dataclass(frozen=True)
@@ -152,6 +161,11 @@ class SimParams:
     slots_override: Optional[int] = None  # force a common ring size (batching)
     stages: Optional[Tuple[str, ...]] = None  # None = DEFAULT_PIPELINE
     arbiter: str = "jax"         # per-bank comparator backend: jax | pallas
+    collect: str = "exact"       # exact | stream — per-txn timestamps vs
+                                 # fixed-size streaming (P²) accumulators;
+                                 # stream requires the schedule pipeline
+    inflight_override: Optional[int] = None  # force a common in-flight-table
+                                 # size (batching; schedule pipeline only)
 
     @property
     def slots_per_master(self) -> int:
@@ -161,10 +175,18 @@ class SimParams:
         return int(2 ** np.ceil(np.log2(
             max(self.outstanding * self.max_burst, self.split_buffer) * 2)))
 
+    @property
+    def inflight_slots(self) -> int:
+        """Schedule-pipeline in-flight table width: a port's two AXI channels
+        can each hold ``outstanding`` live commands, so 2× covers them."""
+        if self.inflight_override is not None:
+            return int(self.inflight_override)
+        return int(2 ** np.ceil(np.log2(max(2 * self.outstanding, 2))))
+
     def static_key(self) -> tuple:
         """Fields that must agree across every point of one compiled batch."""
         return (self.geom, self.expand_rate, self.max_burst, self.banking,
-                self.max_cycles, self.stages, self.arbiter)
+                self.max_cycles, self.stages, self.arbiter, self.collect)
 
     def dyn_vector(self) -> np.ndarray:
         """The traced per-point parameter vector (see ``DYN_FIELDS``)."""
@@ -186,7 +208,20 @@ class SimParams:
             raise ValueError(
                 f"unknown stage(s) {unknown}; registered stages: "
                 f"{sorted(STAGE_REGISTRY)}")
+        if self.collect not in ("exact", "stream"):
+            raise ValueError(f"collect must be 'exact' or 'stream'; "
+                             f"got {self.collect!r}")
+        if self.collect == "stream" and "retire_sched" not in names:
+            raise ValueError(
+                "collect='stream' needs the schedule pipeline (streaming "
+                "accumulators live in the in-flight table the dense stages "
+                "do not maintain); set stages=SCHEDULE_PIPELINE")
         return names
+
+    def uses_schedule(self) -> bool:
+        """True when this point runs the event-schedule pipeline (packed
+        per-master schedules advanced in-scan, no dense beat tables)."""
+        return "accept_sched" in self.pipeline()
 
 
 def bank_of(addr, prm: SimParams):
@@ -206,6 +241,29 @@ def bank_of(addr, prm: SimParams):
         flat = ((c * g.arrays_per_cluster + arr) * g.banks_per_array + bank)
         return (np.asarray(sl).astype(np.int64) * g.banks_per_slice
                 + flat).astype(np.int32)
+    raise ValueError(prm.banking)
+
+
+def bank_of_dev(addr, prm: SimParams):
+    """Traced (jnp, int32) twin of :func:`bank_of` — the schedule pipeline
+    maps the candidate burst's beats to banks *inside* the scan instead of
+    reading the dense precomputed [X, N, max_burst] tables.  Bit-exact
+    against the numpy path for every banking comparator (parity-tested);
+    addresses must already be validated in [0, beats_total)."""
+    g = prm.geom
+    if prm.banking == "paper":
+        return flat_bank_id_dev(addr, g)
+    if prm.banking == "linear":
+        region = g.beats_total // g.num_banks
+        return jnp.clip(addr // region, 0, g.num_banks - 1)
+    if prm.banking == "no_fractal":
+        sl, local = slice_of_beat_dev(addr, g)
+        c = local % g.num_clusters
+        arr = (local // g.num_clusters) % g.arrays_per_cluster
+        bank = (local // (g.num_clusters * g.arrays_per_cluster)) \
+            % g.banks_per_array
+        flat = (c * g.arrays_per_cluster + arr) * g.banks_per_array + bank
+        return sl * g.banks_per_slice + flat
     raise ValueError(prm.banking)
 
 
@@ -310,20 +368,90 @@ def _device_args(prm: SimParams, iw, b, banks, hops, ing, start, prio, dyn):
 # The cycle scan
 # ---------------------------------------------------------------------------
 
-def simulate(trace: Trace, prm: SimParams = SimParams()) -> Dict[str, np.ndarray]:
-    """Run the sim; returns per-port and per-txn statistics (numpy)."""
-    banks_np, _, hops_np, ing_np = _precompute_beats(trace, prm)
-    fn = _core_jitted(prm)
-    out = fn(*_device_args(prm, trace.is_write, trace.burst, banks_np,
-                           hops_np, ing_np, trace.start_or_zeros(),
-                           trace.prio_or_zeros(), prm.dyn_vector()))
+def _as_input(trace, use_sched: bool):
+    """Normalize a Trace/EventSchedule input to what the pipeline runs on
+    (schedules compile from traces with unclassified class / no deadline;
+    dense runs of a schedule fall back to its trace view)."""
+    from repro.core.traffic import EventSchedule, compile_schedule
+    if use_sched:
+        return (trace if isinstance(trace, EventSchedule)
+                else compile_schedule(trace))
+    return trace.to_trace() if isinstance(trace, EventSchedule) else trace
+
+
+def _validate_schedule(sched, prm: SimParams) -> None:
+    """Loud domain checks mirroring :func:`_precompute_beats` (which the
+    schedule path skips): an out-of-range beat would route to a phantom
+    bank and spin to max_cycles; a burst past ``max_burst`` would never
+    drain its tail beats."""
+    g = prm.geom
+    b = np.asarray(sched.burst)
+    a = np.asarray(sched.addr)
+    real = b > 0
+    if b.max(initial=0) > prm.max_burst:
+        bad = np.argwhere(b > prm.max_burst)[0]
+        raise ValueError(
+            f"schedule burst {int(b[tuple(bad)])} at master {bad[0]} event "
+            f"{bad[1]} exceeds max_burst={prm.max_burst} — beats past the "
+            "dispatch window would never issue")
+    oob = real & ((a < 0) | (a + b > g.beats_total))
+    if oob.any():
+        bad = np.argwhere(oob)[0]
+        raise ValueError(
+            f"schedule addresses out of range: master {bad[0]} event "
+            f"{bad[1]} touches beat {int(a[tuple(bad)] + b[tuple(bad)]) - 1} "
+            f"but the fabric has {g.beats_total} beats "
+            f"({g.num_slices} slice(s))")
+
+
+def _host_args(trace, prm: SimParams, use_sched: bool) -> tuple:
+    """One point's host-side argument tuple (before device conversion)."""
+    if use_sched:
+        _validate_schedule(trace, prm)
+        return (np.asarray(trace.is_write, np.int8),
+                np.asarray(trace.burst, np.int8),
+                np.asarray(trace.addr, np.int32),
+                np.asarray(trace.start, np.int32),
+                np.asarray(trace.prio, np.int8),
+                np.asarray(trace.cls, np.int8),
+                np.asarray(trace.deadline, np.int32))
+    banks, _, hops, ing = _precompute_beats(trace, prm)
+    return (np.asarray(trace.is_write, np.int32),
+            np.asarray(trace.burst, np.int32), banks, hops, ing,
+            trace.start_or_zeros(), trace.prio_or_zeros())
+
+
+def _to_device_args(prm: SimParams, host: tuple, dyn, use_sched: bool):
+    if use_sched:
+        iw, b, addr, start, prio, cls, dl = host
+        return (jnp.asarray(iw, jnp.int8), jnp.asarray(b, jnp.int8),
+                jnp.asarray(addr, jnp.int32), jnp.asarray(start, jnp.int32),
+                jnp.asarray(prio, jnp.int8), jnp.asarray(cls, jnp.int8),
+                jnp.asarray(dl, jnp.int32), jnp.asarray(dyn, jnp.int32))
+    return _device_args(prm, *host, dyn)
+
+
+def simulate(trace, prm: SimParams = SimParams()) -> Dict[str, np.ndarray]:
+    """Run the sim; returns per-port and per-txn statistics (numpy).
+
+    Accepts a dense :class:`Trace` or a packed
+    :class:`~repro.core.traffic.EventSchedule`; ``prm.stages`` selects the
+    pipeline (``SCHEDULE_PIPELINE`` advances schedules in-scan, the default
+    dense pipeline precomputes beat tables) and inputs are converted to
+    match."""
+    use_sched = prm.uses_schedule()
+    t = _as_input(trace, use_sched)
+    fn = _sched_jitted(prm) if use_sched else _core_jitted(prm)
+    out = fn(*_to_device_args(prm, _host_args(t, prm, use_sched),
+                              prm.dyn_vector(), use_sched))
     return jax.tree_util.tree_map(np.asarray, out)
 
 
 def batch_envelope(prms: Sequence[SimParams]) -> SimParams:
     """The static envelope shared by a batch: every point must agree on the
-    program-shaping fields; the beat-slot ring is sized for the largest
-    point so one compiled scan serves all of them."""
+    program-shaping fields; the beat-slot ring (and, on the schedule
+    pipeline, the in-flight table) is sized for the largest point so one
+    compiled scan serves all of them."""
     if not prms:
         raise ValueError("empty parameter batch")
     key = prms[0].static_key()
@@ -331,10 +459,12 @@ def batch_envelope(prms: Sequence[SimParams]) -> SimParams:
         if p.static_key() != key:
             raise ValueError(
                 "batched points must share geom/expand_rate/max_burst/"
-                f"banking/max_cycles/stages/arbiter; got {p.static_key()} "
-                f"vs {key}")
+                f"banking/max_cycles/stages/arbiter/collect; got "
+                f"{p.static_key()} vs {key}")
     slots = max(p.slots_per_master for p in prms)
-    return dataclasses_replace(prms[0], slots_override=slots)
+    inflight = max(p.inflight_slots for p in prms)
+    return dataclasses_replace(prms[0], slots_override=slots,
+                               inflight_override=inflight)
 
 
 def batch_sharding(batch_size: int):
@@ -350,9 +480,17 @@ def batch_sharding(batch_size: int):
                                       jax.sharding.PartitionSpec("batch"))
 
 
-def simulate_batch(traces: Sequence[Trace],
-                   prms: Sequence[SimParams], *,
-                   shard: bool = True) -> Dict[str, np.ndarray]:
+def _pad_batch(arrs: list, pad: int) -> list:
+    """Repeat each stacked array's last row ``pad`` times — inert padding
+    lanes whose outputs are sliced off before the caller sees them."""
+    if pad == 0:
+        return arrs
+    return [np.concatenate([a, np.repeat(a[-1:], pad, axis=0)]) for a in arrs]
+
+
+def simulate_batch(traces, prms: Sequence[SimParams], *,
+                   shard: bool = True,
+                   chunk: Optional[int] = None) -> Dict[str, np.ndarray]:
     """Run B (trace, params) points as ONE compiled ``vmap``-of-``scan``.
 
     All traces must already share a common [X, N] shape (see
@@ -361,43 +499,100 @@ def simulate_batch(traces: Sequence[Trace],
     :func:`simulate` with a leading batch axis; each row is bit-for-bit equal
     to ``simulate(traces[i], replace(prms[i], slots_override=envelope))``.
 
-    With ``shard=True`` (default) and more than one JAX device visible, the
-    batch axis is sharded across devices via :func:`batch_sharding`, so a
-    scenario×parameter grid scales across accelerators; on one device (or a
-    non-divisible batch) it falls back to the single-device path unchanged.
+    Scaling knobs:
+
+    * **Shared trace** — pass ``traces`` of length 1 with B > 1 parameter
+      points and the trace enters the compiled program *unbatched*
+      (``vmap`` ``in_axes=None``): a 100k-point parameter grid carries one
+      copy of the workload instead of 100k.
+    * **Chunking** (``chunk=C``) — the batch streams through a
+      ``lax.map`` over ``ceil(B / C)`` chunks of C vmapped points each, so
+      peak live memory is one chunk's worth, not the whole grid's;
+      non-divisible batches are padded with inert repeat-lanes and sliced
+      back to B.  Combine with ``collect="stream"`` points to keep the
+      *outputs* fixed-size too.
+    * **Sharding** (``shard=True``, default) — with more than one JAX
+      device, the batch axis is sharded via :func:`batch_sharding`;
+      non-divisible batches are padded up to the device multiple (and
+      sliced back) instead of falling back to one device.  In chunked mode
+      the per-chunk axis is sharded when C divides the device count.
     """
-    if len(traces) != len(prms):
-        raise ValueError(f"{len(traces)} traces vs {len(prms)} param points")
-    shape = (traces[0].is_write.shape)
+    if not prms:
+        raise ValueError("empty parameter batch")
+    B = len(prms)
+    shared = len(traces) == 1 and B > 1
+    if not shared and len(traces) != B:
+        raise ValueError(f"{len(traces)} traces vs {len(prms)} param points "
+                         "(pass one trace to share it across all points)")
+    env = batch_envelope(prms)
+    use_sched = env.uses_schedule()
+    traces = [_as_input(t, use_sched) for t in traces]
+    shape = traces[0].is_write.shape
     for t in traces[1:]:
         if t.is_write.shape != shape:
             raise ValueError("all traces in a batch must share [X, N]; "
                              f"got {t.is_write.shape} vs {shape}")
-    env = batch_envelope(prms)
-    pre = [_precompute_beats(t, p) for t, p in zip(traces, prms)]
-    banks = np.stack([b for b, _, _, _ in pre])
-    hops = np.stack([h for _, _, h, _ in pre])
-    ing = np.stack([i for _, _, _, i in pre])
-    iw = np.stack([np.asarray(t.is_write, np.int32) for t in traces])
-    b = np.stack([np.asarray(t.burst, np.int32) for t in traces])
-    st = np.stack([t.start_or_zeros() for t in traces])
-    pr = np.stack([t.prio_or_zeros() for t in traces])
     dyn = np.stack([p.dyn_vector() for p in prms])
-    args = list(_device_args(env, iw, b, banks, hops, ing, st, pr, dyn))
-    sharding = batch_sharding(len(traces)) if shard else None
+    if shared:
+        targs = [np.asarray(a) for a in _host_args(traces[0], env, use_sched)]
+    else:
+        per = [_host_args(t, p, use_sched) for t, p in zip(traces, prms)]
+        targs = [np.stack([h[i] for h in per]) for i in range(len(per[0]))]
+
+    ndev = len(jax.devices())
+    if chunk is not None and 0 < chunk < B:
+        n_chunks = -(-B // chunk)
+        batched = ([dyn] if shared else targs + [dyn])
+        batched = _pad_batch(batched, n_chunks * chunk - B)
+        batched = [a.reshape((n_chunks, chunk) + a.shape[1:])
+                   for a in batched]
+        if shard and ndev > 1 and chunk % ndev == 0:
+            mesh = jax.sharding.Mesh(np.array(jax.devices()), ("batch",))
+            spec = jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec(None, "batch"))
+            batched = [jax.device_put(a, spec) for a in batched]
+        fn = _chunked_jitted(env, use_sched, shared)
+        if shared:
+            dev = _to_device_args(env, tuple(targs), batched[0], use_sched)
+            out = fn(*dev)
+        else:
+            out = fn(*_to_device_args(env, tuple(batched[:-1]), batched[-1],
+                                      use_sched))
+        out = jax.tree_util.tree_map(
+            lambda a: np.asarray(a).reshape((n_chunks * chunk,)
+                                            + a.shape[2:])[:B], out)
+        return out
+
+    if shared:
+        sharding = batch_sharding(B) if shard else None
+        dev = list(_to_device_args(env, tuple(targs), dyn, use_sched))
+        if sharding is not None:
+            dev[-1] = jax.device_put(dev[-1], sharding)
+        fn = _shared_batch_jitted(env, use_sched)
+        out = fn(*dev)
+        return jax.tree_util.tree_map(np.asarray, out)
+
+    pad = (-B) % ndev if (shard and ndev > 1) else 0
+    stacked = _pad_batch(targs + [dyn], pad)
+    args = list(_to_device_args(env, tuple(stacked[:-1]), stacked[-1],
+                                use_sched))
+    sharding = batch_sharding(B + pad) if shard else None
     if sharding is not None:
         args = [jax.device_put(a, sharding) for a in args]
-    fn = _batch_jitted(env)
+    fn = (_sched_batch_jitted(env) if use_sched else _batch_jitted(env))
     out = fn(*args)
+    if pad:
+        out = jax.tree_util.tree_map(lambda a: a[:B], out)
     return jax.tree_util.tree_map(np.asarray, out)
 
 
 def _static_prm(prm: SimParams) -> SimParams:
     """Canonical jit-cache key: dyn fields travel as traced values, so two
     SimParams differing only in them share one compiled program.  The ring
-    size is pinned first (it derives from ``outstanding``/``split_buffer``
-    when not overridden)."""
+    and in-flight-table sizes are pinned first (they derive from
+    ``outstanding``/``split_buffer`` when not overridden)."""
     return dataclasses_replace(prm, slots_override=prm.slots_per_master,
+                               inflight_override=prm.inflight_slots,
                                **{f: 0 for f in DYN_FIELDS})
 
 
@@ -407,6 +602,22 @@ def _core_jitted(prm: SimParams):
 
 def _batch_jitted(prm: SimParams):
     return _batch_jitted_cached(_static_prm(prm))
+
+
+def _sched_jitted(prm: SimParams):
+    return _sched_jitted_cached(_static_prm(prm))
+
+
+def _sched_batch_jitted(prm: SimParams):
+    return _sched_batch_jitted_cached(_static_prm(prm))
+
+
+def _shared_batch_jitted(prm: SimParams, use_sched: bool):
+    return _shared_batch_jitted_cached(_static_prm(prm), use_sched)
+
+
+def _chunked_jitted(prm: SimParams, use_sched: bool, shared: bool):
+    return _chunked_jitted_cached(_static_prm(prm), use_sched, shared)
 
 
 def _donate() -> tuple:
@@ -426,6 +637,44 @@ def _batch_jitted_cached(prm: SimParams):
                    donate_argnums=_donate())
 
 
+@lru_cache(maxsize=32)
+def _sched_jitted_cached(prm: SimParams):
+    return jax.jit(partial(_core_sched, prm=prm), donate_argnums=_donate())
+
+
+@lru_cache(maxsize=32)
+def _sched_batch_jitted_cached(prm: SimParams):
+    return jax.jit(jax.vmap(partial(_core_sched, prm=prm)),
+                   donate_argnums=_donate())
+
+
+@lru_cache(maxsize=32)
+def _shared_batch_jitted_cached(prm: SimParams, use_sched: bool):
+    """One trace broadcast across every point: only ``dyn`` is batched
+    (no donation — the trace buffers are reused across calls)."""
+    core = partial(_core_sched if use_sched else _core, prm=prm)
+    return jax.jit(jax.vmap(core, in_axes=(None,) * 7 + (0,)))
+
+
+@lru_cache(maxsize=32)
+def _chunked_jitted_cached(prm: SimParams, use_sched: bool, shared: bool):
+    """``lax.map`` over chunks of a vmapped core: peak live memory is one
+    chunk of points, not the whole grid."""
+    core = partial(_core_sched if use_sched else _core, prm=prm)
+    if shared:
+        body = jax.vmap(core, in_axes=(None,) * 7 + (0,))
+
+        def fn(*args):
+            targs, dyn = args[:7], args[7]        # dyn: [n_chunks, C, ...]
+            return jax.lax.map(lambda dd: body(*targs, dd), dyn)
+    else:
+        body = jax.vmap(core)
+
+        def fn(*args):                            # each: [n_chunks, C, ...]
+            return jax.lax.map(lambda aa: body(*aa), args)
+    return jax.jit(fn)
+
+
 def _age_cap(prm: SimParams, num_masters: int) -> int:
     """Static saturation point of the FCFS age term: the next power of two
     above ``max_cycles`` (so the FCFS key cannot saturate within a run),
@@ -434,6 +683,43 @@ def _age_cap(prm: SimParams, num_masters: int) -> int:
     cap = 1 << int(np.ceil(np.log2(max(prm.max_cycles + 1, 256))))
     budget = (2**30 - 1) // (PRIO_LEVELS * max(num_masters, 1)) - 1
     return int(min(cap - 1, budget))
+
+
+# ---------------------------------------------------------------------------
+# Footprint accounting (benchmarks/sim_speed.py's live-bytes gate)
+# ---------------------------------------------------------------------------
+
+def carry_nbytes(prm: SimParams, num_masters: int, num_txns: int) -> int:
+    """Bytes of ONE point's scan carry (:class:`SimState`) — what a batch or
+    chunk multiplies.  Shape-only (``jax.eval_shape``), nothing allocated."""
+    p = _static_prm(prm)
+    use_sched = p.uses_schedule()
+    exact = p.collect == "exact"
+
+    def build():
+        d = {f: jnp.int32(0) for f in DYN_FIELDS}
+        return init_state(
+            X=num_masters, N=num_txns, P=p.slots_per_master,
+            NB=p.geom.num_banks, NSL=p.geom.num_slices,
+            tx_burst=jnp.zeros((num_masters, num_txns), jnp.int8),
+            d=d, F=p.inflight_slots if use_sched else 0,
+            NC=0 if exact else STREAM_CLASSES,
+            NQ=len(STREAM_PCTS), exact=exact)
+
+    shapes = jax.eval_shape(build)
+    return int(sum(int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+                   for leaf in jax.tree_util.tree_leaves(shapes)))
+
+
+def input_nbytes(trace, prm: SimParams) -> int:
+    """Bytes of ONE point's prepared simulator inputs.  The dense path's
+    precomputed [X, N, max_burst] beat tables dominate it; the schedule
+    path carries only the packed event arrays."""
+    use_sched = prm.uses_schedule()
+    t = _as_input(trace, use_sched)
+    return int(sum(np.asarray(a).nbytes
+                   for a in _host_args(t, prm, use_sched))
+               + prm.dyn_vector().nbytes)
 
 
 # ---------------------------------------------------------------------------
@@ -458,6 +744,13 @@ STAGE_REGISTRY: Dict[str, Stage] = {}
 
 DEFAULT_PIPELINE = ("accept", "dispatch", "bank_arbitrate", "router_release",
                     "return_bus", "retire")
+
+#: the event-schedule pipeline: packed per-master schedules advanced inside
+#: the scan (beat→bank routing computed on the fly, per-command state in the
+#: fixed-width in-flight table) — select via ``SimParams(stages=...)``.  The
+#: dense DEFAULT_PIPELINE stays the golden-pinned compatibility path.
+SCHEDULE_PIPELINE = ("accept_sched", "dispatch_sched", "bank_arbitrate",
+                     "router_release", "return_bus", "retire_sched")
 
 
 def register_stage(name: str):
@@ -728,6 +1021,215 @@ def _stage_retire(st: SimState, wires, c):
     return st, wires
 
 
+@register_stage("accept_sched")
+def _stage_accept_sched(st: SimState, wires, c):
+    """Schedule-pipeline acceptance: the same credit/regulator/router gate as
+    ``accept``, but the candidate burst's beat→(bank, hops, ingress-need)
+    routing is computed on the fly from its address (``bank_of_dev``) instead
+    of gathered from dense precomputed tables, and the accepted command is
+    allocated a slot in the in-flight table.  Decision-for-decision identical
+    to ``accept`` (golden-pinned via ``collect="exact"``)."""
+    N, NSL = c["N"], c["NSL"]
+    d = c["d"]
+    now = st.now
+    ar = c["ar"]
+    nt = st.next_txn
+    has_txn = nt < N
+    nt_c = jnp.minimum(nt, N - 1)
+    burst = widen(c["tx_burst"][ar, nt_c])
+    is_w = widen(c["tx_write"][ar, nt_c])
+    ready = c["tx_start"][ar, nt_c] <= now
+    dirn = is_w
+    # in-scan beat routing for the candidate burst only ([X, max_burst] —
+    # nothing sized by the schedule length)
+    off = c["beat_off"][None, :]                           # [1, mb]
+    bvalid = off < burst[:, None]                          # [X, mb]
+    beat = jnp.where(bvalid, c["tx_addr"][ar, nt_c][:, None] + off, 0)
+    banks_txn = bank_of_dev(beat, c["prm"])                # [X, mb] int32
+    tgt = banks_txn // c["banks_per_slice"]
+    dist = jnp.abs(tgt - c["home"][:, None])
+    hops_txn = jnp.where(bvalid, jnp.minimum(dist, NSL - dist), 0)
+    remote = bvalid & (hops_txn > 0)
+    need = jnp.sum(
+        remote[:, :, None] & (tgt[:, :, None]
+                              == jnp.arange(NSL)[None, None, :]),
+        axis=1).astype(jnp.int32)                          # [X, NSL]
+    # gates identical to ``accept`` (see there for the regulator/router
+    # debt-not-deadlock reasoning)
+    reg_gate = c["regulated"] & (d["reg_rate"] > 0)
+    reg_tokens = jnp.minimum(st.reg_tokens + d["reg_rate"],
+                             d["reg_burst"] * REG_SCALE)
+    reg_need = jnp.minimum(burst, d["reg_burst"]) * REG_SCALE
+    pre_can = (has_txn & (burst > 0) & ready
+               & (st.outstanding[ar, dirn] < d["outstanding"])
+               & (st.credits[ar, dirn] >= burst)
+               & ((is_w == 0) | (st.fwd_free <= now))
+               & (~reg_gate | (reg_tokens >= reg_need)))
+    need_cand = jnp.where(pre_can[:, None], need, 0)
+    prior = jnp.cumsum(need_cand, axis=0) - need_cand
+    need_clamped = jnp.minimum(need, d["slice_ingress"])
+    ing_ok = jnp.all(
+        (d["slice_ingress"] == 0) | (need_clamped == 0)
+        | (st.ing_used[None, :] + prior + need_clamped
+           <= d["slice_ingress"]),
+        axis=1)
+    can = pre_can & ing_ok
+    reg_tokens = reg_tokens - jnp.where(can & reg_gate,
+                                        burst * REG_SCALE, 0)
+    ing_used = st.ing_used + jnp.sum(
+        jnp.where(can[:, None], need, 0), axis=0)
+    # in-flight table allocation: the credit gate caps live commands at
+    # 2×outstanding - 1 < F, so a free slot (remaining == 0) always exists
+    idx = jnp.argmax(widen(st.ift_remaining) == 0, axis=1).astype(jnp.int32)
+
+    def put(tbl, val):
+        keep = widen(tbl[ar, idx])
+        return tbl.at[ar, idx].set(jnp.where(can, val, keep).astype(tbl.dtype))
+
+    upd = dict(
+        next_txn=nt + can.astype(jnp.int32),
+        outstanding=st.outstanding.at[ar, dirn].add(
+            can.astype(st.outstanding.dtype)),
+        credits=st.credits.at[ar, dirn].add(
+            (-jnp.where(can, burst, 0)).astype(st.credits.dtype)),
+        fwd_free=jnp.where(can & (is_w > 0), now + burst, st.fwd_free),
+        reg_tokens=reg_tokens, ing_used=ing_used,
+        ift_write=put(st.ift_write, is_w),
+        ift_burst=put(st.ift_burst, burst),
+        ift_remaining=put(st.ift_remaining, burst),
+        ift_accept=put(st.ift_accept, now),
+        ift_start=put(st.ift_start, c["tx_start"][ar, nt_c]),
+        ift_txn=put(st.ift_txn, nt_c),
+    )
+    if c["exact"]:
+        upd["accept_cycle"] = st.accept_cycle.at[ar, nt_c].max(
+            jnp.where(can, now, -1))
+    st = st.replace(**upd)
+    return st, dict(wires, accept=dict(can=can, burst=burst, is_w=is_w,
+                                       nt_c=nt_c, banks_txn=banks_txn,
+                                       hops_txn=hops_txn, ift_idx=idx))
+
+
+@register_stage("dispatch_sched")
+def _stage_dispatch_sched(st: SimState, wires, c):
+    """Schedule-pipeline dispatch: identical ring math to ``dispatch``, but
+    the burst's per-beat banks/hops come off the accept wires (computed
+    in-scan) and slots record the in-flight-table index instead of the dense
+    transaction index."""
+    prm, d = c["prm"], c["d"]
+    acc = wires["accept"]
+    now = st.now
+    ar = c["ar"]
+    can, burst, is_w = acc["can"], acc["burst"], acc["is_w"]
+    off = (c["pos"][None, :] - st.beats_issued[:, None]) % c["P"]  # [X, P]
+    wr = can[:, None] & (off < burst[:, None])
+    offc = jnp.minimum(off, prm.max_burst - 1)
+    bank_new = acc["banks_txn"][ar[:, None], offc]         # [X, P] int32
+    hops_new = acc["hops_txn"][ar[:, None], offc]
+    pace = jnp.where(is_w[:, None] > 0, off, off // prm.expand_rate)
+    arrive = now + d["cmd_latency"] + pace + d["hop_latency"] * hops_new
+    phase, write = unpack_slot_flags(st.sl_flags)
+    st = st.replace(
+        sl_flags=pack_slot_flags(jnp.where(wr, SLOT_WAITING, phase),
+                                 jnp.where(wr, is_w[:, None], write)),
+        sl_bank=jnp.where(wr, bank_new.astype(st.sl_bank.dtype), st.sl_bank),
+        sl_arrive=jnp.where(wr, arrive, st.sl_arrive),
+        sl_ready=jnp.where(wr, INF32, st.sl_ready),
+        sl_txn=jnp.where(wr, acc["ift_idx"][:, None].astype(st.sl_txn.dtype),
+                         st.sl_txn),
+        sl_hops=jnp.where(wr, hops_new.astype(jnp.int8), st.sl_hops),
+        beats_issued=st.beats_issued + jnp.where(can, burst, 0))
+    return st, wires
+
+
+@register_stage("retire_sched")
+def _stage_retire_sched(st: SimState, wires, c):
+    """Schedule-pipeline retire: the same completion logic as ``retire`` on
+    the [X, F] in-flight table instead of the dense [X, N] beat counters.
+    ``collect="exact"`` scatters timestamps back to the [X, N] arrays
+    (golden parity); ``collect="stream"`` folds each completion into the
+    fixed-size accumulators — per-port windows for throughput, P² marker
+    groups per (view, class, direction) for latency percentiles, and
+    per-class deadline counters — so nothing in the carry scales with the
+    schedule length."""
+    d = c["d"]
+    now = st.now
+    arb, ret = wires["arb"], wires["ret"]
+    rem_before = widen(st.ift_remaining)                   # [X, F]
+    wdec = (arb["has_win"] & (arb["wwrite"] == 1)).astype(jnp.int32)
+    remaining = rem_before.at[arb["wmaster"], arb["wtxn"]].add(-wdec)
+    remaining = remaining.at[c["ar"], ret["ret_txn"]].add(
+        -ret["ret_any"].astype(jnp.int32))
+    just_done = (remaining == 0) & (rem_before > 0)
+    iw = widen(st.ift_write)
+    jr = just_done & (iw == 0)
+    jw = just_done & (iw == 1)
+    done_r = jnp.sum(jr, axis=1)
+    done_w = jnp.sum(jw, axis=1)
+    outstanding = st.outstanding - jnp.stack(
+        [done_r, done_w], axis=1).astype(st.outstanding.dtype)
+    in_r = (outstanding[:, 0] > 0).astype(jnp.int32)
+    in_w = (outstanding[:, 1] > 0).astype(jnp.int32)
+    complete_t = now + d["ret_latency"]
+    upd = dict(now=now + 1, outstanding=outstanding,
+               ift_remaining=remaining.astype(st.ift_remaining.dtype),
+               busy_r=st.busy_r + in_r, busy_w=st.busy_w + in_w,
+               busy_any=st.busy_any + jnp.maximum(in_r, in_w))
+    if c["exact"]:
+        rows = jnp.broadcast_to(c["ar"][:, None], just_done.shape)
+        upd["complete_cycle"] = st.complete_cycle.at[
+            rows, widen(st.ift_txn)].max(
+            jnp.where(just_done, complete_t, -1))
+        return st.replace(**upd), wires
+
+    # --- streaming accumulators (collect="stream") ---------------------
+    acc = st.ift_accept
+    bts = widen(st.ift_burst)
+    lat = (complete_t - acc).astype(jnp.float32)
+    e2e = (complete_t - st.ift_start).astype(jnp.float32)
+
+    def per_dir(fn, sel_r, sel_w):
+        return jnp.stack([fn(sel_r), fn(sel_w)], axis=1)   # [X, 2]
+
+    upd.update(
+        pt_first=jnp.minimum(st.pt_first, per_dir(
+            lambda s: jnp.min(jnp.where(s, acc, INF32), axis=1), jr, jw)),
+        pt_last=jnp.where(
+            per_dir(lambda s: jnp.any(s, axis=1), jr, jw),
+            complete_t, st.pt_last),
+        pt_beats=st.pt_beats + per_dir(
+            lambda s: jnp.sum(jnp.where(s, bts, 0), axis=1), jr, jw),
+        pt_count=st.pt_count + per_dir(
+            lambda s: jnp.sum(s, axis=1), jr, jw),
+        pt_lat_sum=st.pt_lat_sum + per_dir(
+            lambda s: jnp.sum(jnp.where(s, lat, 0.0), axis=1), jr, jw),
+        pt_lat_max=jnp.maximum(st.pt_lat_max, per_dir(
+            lambda s: jnp.max(jnp.where(s, lat, 0.0), axis=1), jr, jw)),
+    )
+    NC = c["NC"]
+    cls = jnp.broadcast_to(widen(c["tx_class"])[:, None], iw.shape)
+    gcd = (cls * 2 + iw).reshape(-1)                       # class × dir
+    jd_f = just_done.reshape(-1)
+    upd["cls_done"] = (st.cls_done.reshape(-1).at[gcd]
+                       .add(jd_f.astype(jnp.int32)).reshape(NC, 2))
+    has_dl = c["tx_deadline"][:, None] >= 0
+    late = (complete_t - st.ift_start) > c["tx_deadline"][:, None]
+    dd = (just_done & has_dl).reshape(-1)
+    cls_f = cls.reshape(-1)
+    upd["dl_done"] = st.dl_done.at[cls_f].add(dd.astype(jnp.int32))
+    upd["dl_miss"] = st.dl_miss.at[cls_f].add(
+        (dd & late.reshape(-1)).astype(jnp.int32))
+    # P² groups: view-major (0 = accept→complete, 1 = earliest-issue→complete)
+    vals = jnp.concatenate([lat.reshape(-1), e2e.reshape(-1)])
+    gid = jnp.concatenate([gcd, gcd + 2 * NC])
+    mask = jnp.concatenate([jd_f, jd_f])
+    h, n, pc = p2_update(st.p2_height, st.p2_npos, st.p2_count,
+                         vals, gid, mask)
+    upd.update(p2_height=h, p2_npos=n, p2_count=pc,
+               p2_max=st.p2_max.at[gid].max(jnp.where(mask, vals, 0.0)))
+    return st.replace(**upd), wires
+
+
 def _core(tx_write, tx_burst, tx_banks, tx_hops, tx_ing, tx_start, tx_prio,
           dyn, *, prm: SimParams):
     X, N = tx_write.shape
@@ -770,6 +1272,123 @@ def _core(tx_write, tx_burst, tx_banks, tx_hops, tx_ing, tx_start, tx_prio,
 
     state, _ = jax.lax.scan(cycle, state, None, length=prm.max_cycles)
     return _metrics(state, tx_burst, tx_write, prm)
+
+
+def _core_sched(tx_write, tx_burst, tx_addr, tx_start, tx_prio, tx_class,
+                tx_deadline, dyn, *, prm: SimParams):
+    """Schedule-pipeline core: packed per-master event schedules (int8
+    direction/burst + int32 addr/start per event, per-master class/deadline)
+    advanced inside the scan — no dense [X, N, max_burst] beat tables, and
+    with ``collect="stream"`` no [X, N] timestamp arrays either."""
+    X, N = tx_write.shape
+    P = prm.slots_per_master
+    F = prm.inflight_slots
+    S = X * P
+    NB = prm.geom.num_banks
+    NSL = prm.geom.num_slices
+    exact = prm.collect == "exact"
+
+    dyn = jnp.asarray(dyn, jnp.int32)
+    d = {name: dyn[i] for i, name in enumerate(DYN_FIELDS)}
+
+    tx_prio = jnp.clip(widen(tx_prio), 0, PRIO_LEVELS - 1)
+    ar = jnp.arange(X, dtype=jnp.int32)
+    pos = jnp.arange(P, dtype=jnp.int32)
+
+    ctx = dict(
+        X=X, N=N, P=P, S=S, NB=NB, NSL=NSL,
+        AGE_CAP=_age_cap(prm, X),
+        prm=prm, d=d,
+        ar=ar, pos=pos,
+        master_col=ar[:, None],
+        flat_ids=ar[:, None] * P + pos[None, :],
+        bank_slice=jnp.arange(NB, dtype=jnp.int32)
+        // prm.geom.banks_per_slice,
+        slot_prio=tx_prio[:, None],
+        regulated=tx_prio >= REGULATED_PRIO,
+        beat_off=jnp.arange(prm.max_burst, dtype=jnp.int32),
+        home=jnp.asarray(master_home_slices(X, prm.geom), jnp.int32),
+        banks_per_slice=prm.geom.banks_per_slice,
+        exact=exact, NC=STREAM_CLASSES,
+        tx_write=tx_write, tx_burst=tx_burst, tx_addr=tx_addr,
+        tx_start=tx_start, tx_class=tx_class, tx_deadline=tx_deadline,
+    )
+
+    state = init_state(X=X, N=N, P=P, NB=NB, NSL=NSL, tx_burst=tx_burst,
+                       d=d, F=F, NC=0 if exact else STREAM_CLASSES,
+                       NQ=len(STREAM_PCTS), exact=exact)
+    stage_fns = [STAGE_REGISTRY[name] for name in prm.pipeline()]
+
+    def cycle(st, _):
+        wires: dict = {}
+        for fn in stage_fns:
+            st, wires = fn(st, wires, ctx)
+        return st, None
+
+    state, _ = jax.lax.scan(cycle, state, None, length=prm.max_cycles)
+    if exact:
+        return _metrics(state, tx_burst, tx_write, prm)
+    return _stream_metrics(state, tx_burst, tx_write, prm)
+
+
+def _stream_metrics(st: SimState, burst, is_w,
+                    prm: SimParams) -> Dict[str, jnp.ndarray]:
+    """Metrics from the streaming accumulators: the same port-level surface
+    as :func:`_metrics` minus the per-transaction timestamp arrays, plus the
+    raw P²/class/deadline accumulator state (summarized host-side by
+    ``scenarios.sweep``; merged across batch lanes by
+    ``repro.core.percentile.p2_merge_quantile``)."""
+    n_real = jnp.sum(widen(burst) > 0)
+    first = jnp.concatenate([st.pt_first,
+                             jnp.min(st.pt_first, 1, keepdims=True)], 1)
+    last = jnp.concatenate([st.pt_last,
+                            jnp.max(st.pt_last, 1, keepdims=True)], 1)
+    beats = jnp.concatenate([st.pt_beats,
+                             jnp.sum(st.pt_beats, 1, keepdims=True)], 1)
+    count = jnp.concatenate([st.pt_count,
+                             jnp.sum(st.pt_count, 1, keepdims=True)], 1)
+    span = jnp.maximum(last - first, 1).astype(jnp.float32)
+    tput = jnp.where(count > 0, beats / span, 0.0)         # [X, (r, w, any)]
+    busy = jnp.stack([st.busy_r, st.busy_w, st.busy_any], axis=1)
+    tput_busy = jnp.where(
+        count > 0, beats / jnp.maximum(busy, 1).astype(jnp.float32), 0.0)
+    cnt = st.pt_count.astype(jnp.float32)
+    granted_beats = jnp.sum(st.slice_beats)
+    return {
+        "throughput": tput[:, 2],
+        "read_throughput": tput[:, 0],
+        "write_throughput": tput[:, 1],
+        "throughput_busy": tput_busy[:, 2],
+        "read_throughput_busy": tput_busy[:, 0],
+        "write_throughput_busy": tput_busy[:, 1],
+        "busy_cycles": st.busy_any,
+        "read_lat_avg": jnp.where(cnt[:, 0] > 0,
+                                  st.pt_lat_sum[:, 0]
+                                  / jnp.maximum(cnt[:, 0], 1.0), 0.0),
+        "read_lat_max": st.pt_lat_max[:, 0],
+        "write_lat_avg": jnp.where(cnt[:, 1] > 0,
+                                   st.pt_lat_sum[:, 1]
+                                   / jnp.maximum(cnt[:, 1], 1.0), 0.0),
+        "write_lat_max": st.pt_lat_max[:, 1],
+        "all_done": jnp.sum(st.pt_count) == n_real,
+        "beats_done": st.beats_done,
+        "cycles": st.now,
+        "slice_beats": st.slice_beats,
+        "remote_beats": st.remote_beats,
+        "remote_beat_fraction": jnp.where(
+            granted_beats > 0,
+            st.remote_beats / jnp.maximum(granted_beats, 1)
+            .astype(jnp.float32), 0.0),
+        # streaming accumulator state (fixed-size; see percentile.py)
+        "p2_height": st.p2_height,
+        "p2_npos": st.p2_npos,
+        "p2_count": st.p2_count,
+        "p2_max": st.p2_max,
+        "cls_done": st.cls_done,
+        "dl_done": st.dl_done,
+        "dl_miss": st.dl_miss,
+        "txns_done_port": st.pt_count,
+    }
 
 
 def _metrics(st: SimState, burst, is_w, prm: SimParams) -> Dict[str, jnp.ndarray]:

@@ -35,6 +35,34 @@ complete_cycle     int32       completion timestamp per transaction [X, N]
 beats_done         int32       read beats returned per port [X]
 =================  ==========  =============================================
 
+Schedule-pipeline extension (``init_state(F=..., ...)``; every array below is
+zero-size on the dense path, so the dense carry is byte-identical):
+
+=================  ==========  =============================================
+ift_write/burst    int8        in-flight transaction table [X, F]: direction
+ift_remaining      int8        and undelivered beats per live command
+ift_accept/start   int32       acceptance / earliest-issue cycle [X, F]
+ift_txn            int16/32    schedule index of the live command [X, F]
+pt_first/last      int32       per-port per-direction completion window [X,2]
+pt_beats/count     int32       completed beats / transactions [X, 2]
+pt_lat_sum/max     float32     accept→complete latency accumulators [X, 2]
+p2_height/npos     float32     P² markers [G, NQ, 5] (G = 4 × NC groups:
+p2_count           int32       (view, class, direction); NQ percentiles)
+p2_max             float32     exact per-group latency maximum [G]
+cls_done           int32       completed transactions per class × dir [NC,2]
+dl_done/dl_miss    int32       deadline bookkeeping per class [NC]
+=================  ==========  =============================================
+
+The in-flight table replaces the dense per-transaction ``remaining``/
+``accept_cycle``/``complete_cycle`` arrays as the scan's per-command store:
+``F`` is sized to ``2 × outstanding`` (a port can never hold more live
+commands than its two channels' credit caps), so the carry stops scaling
+with the schedule length ``N`` — the change that lets 100k-point grids and
+thousand-request serving streams fit in memory.  With ``collect="exact"``
+the schedule pipeline still carries the ``[X, N]`` timestamp arrays (for
+golden-pinned parity); ``collect="stream"`` drops them and carries the
+streaming accumulators instead.
+
 Slot arrays are laid out ``[X, P]`` (port-major) rather than flat ``[S]``:
 per-port operations (the return bus, dispatch ring math) become dense
 reductions along the ``P`` axis instead of segment/scatter ops, and the flat
@@ -132,6 +160,26 @@ class SimState:
     accept_cycle: jnp.ndarray
     complete_cycle: jnp.ndarray
     beats_done: jnp.ndarray
+    # schedule-pipeline extension (zero-size on the dense path)
+    ift_write: jnp.ndarray
+    ift_burst: jnp.ndarray
+    ift_remaining: jnp.ndarray
+    ift_accept: jnp.ndarray
+    ift_start: jnp.ndarray
+    ift_txn: jnp.ndarray
+    pt_first: jnp.ndarray
+    pt_last: jnp.ndarray
+    pt_beats: jnp.ndarray
+    pt_count: jnp.ndarray
+    pt_lat_sum: jnp.ndarray
+    pt_lat_max: jnp.ndarray
+    p2_height: jnp.ndarray
+    p2_npos: jnp.ndarray
+    p2_count: jnp.ndarray
+    p2_max: jnp.ndarray
+    cls_done: jnp.ndarray
+    dl_done: jnp.ndarray
+    dl_miss: jnp.ndarray
 
     def replace(self, **updates) -> "SimState":
         """Functional field update (the stage functions' write path)."""
@@ -144,13 +192,25 @@ jax.tree_util.register_dataclass(
 
 
 def init_state(*, X: int, N: int, P: int, NB: int, NSL: int,
-               tx_burst, d) -> SimState:
+               tx_burst, d, F: int = 0, NC: int = 0, NQ: int = 0,
+               exact: bool = True) -> SimState:
     """Cycle-0 state for ``X`` ports × ``P`` ring slots, ``N`` transactions,
     ``NB`` banks, ``NSL`` slices.  ``d`` maps dyn-field names to traced int32
     scalars (credits and regulator buckets initialize from them);
-    ``tx_burst`` seeds the per-transaction remaining-beat counters."""
+    ``tx_burst`` seeds the per-transaction remaining-beat counters.
+
+    ``F > 0`` allocates the schedule pipeline's in-flight table; ``exact``
+    keeps the ``[X, N]`` timestamp arrays (dense path, or schedule path in
+    golden-parity mode).  ``exact=False`` swaps them for the streaming
+    accumulators — ``NC`` QoS classes × ``NQ`` tracked percentiles."""
+    from repro.core.percentile import p2_init
     from repro.core.simulator import REG_SCALE  # value-only, no cycle dep
 
+    nex = N if exact else 0          # dense timestamp width
+    stream = F > 0 and not exact
+    XS = X if stream else 0          # streaming per-port accumulator width
+    G = 4 * NC                       # (lat|e2e) × class × direction groups
+    p2_h, p2_n, p2_c = p2_init(G, NQ)
     i16_zeros2 = jnp.zeros((X, 2), jnp.int16)
     return SimState(
         now=jnp.int32(0),
@@ -174,8 +234,30 @@ def init_state(*, X: int, N: int, P: int, NB: int, NSL: int,
         ing_used=jnp.zeros((NSL,), jnp.int32),
         slice_beats=jnp.zeros((NSL,), jnp.int32),
         remote_beats=jnp.int32(0),
-        remaining=jnp.where(tx_burst > 0, tx_burst, 0).astype(jnp.int8),
-        accept_cycle=jnp.full((X, N), -1, jnp.int32),
-        complete_cycle=jnp.full((X, N), -1, jnp.int32),
+        # the schedule pipeline (F > 0) tracks undelivered beats in the
+        # in-flight table instead of one dense row per transaction
+        remaining=(jnp.zeros((X, 0), jnp.int8) if F > 0 else
+                   jnp.where(tx_burst > 0, tx_burst, 0).astype(jnp.int8)),
+        accept_cycle=jnp.full((X, nex), -1, jnp.int32),
+        complete_cycle=jnp.full((X, nex), -1, jnp.int32),
         beats_done=jnp.zeros((X,), jnp.int32),
+        ift_write=jnp.zeros((X, F), jnp.int8),
+        ift_burst=jnp.zeros((X, F), jnp.int8),
+        ift_remaining=jnp.zeros((X, F), jnp.int8),
+        ift_accept=jnp.zeros((X, F), jnp.int32),
+        ift_start=jnp.zeros((X, F), jnp.int32),
+        ift_txn=jnp.zeros((X, F), txn_dtype(max(N, 1))),
+        pt_first=jnp.full((XS, 2), INF32),
+        pt_last=jnp.full((XS, 2), -1, jnp.int32),
+        pt_beats=jnp.zeros((XS, 2), jnp.int32),
+        pt_count=jnp.zeros((XS, 2), jnp.int32),
+        pt_lat_sum=jnp.zeros((XS, 2), jnp.float32),
+        pt_lat_max=jnp.zeros((XS, 2), jnp.float32),
+        p2_height=p2_h,
+        p2_npos=p2_n,
+        p2_count=p2_c,
+        p2_max=jnp.zeros((G,), jnp.float32),
+        cls_done=jnp.zeros((NC, 2), jnp.int32),
+        dl_done=jnp.zeros((NC,), jnp.int32),
+        dl_miss=jnp.zeros((NC,), jnp.int32),
     )

@@ -173,10 +173,29 @@ def cpu_scatter(lo: int, hi: int, *, txns: int, rate: float,
     return _finalize(iw, b, a, s, lo, hi, txns)
 
 
+def uniform_scatter(lo: int, hi: int, *, txns: int, rate: float,
+                    seed: int, params: Dict) -> TraceRow:
+    """Neutral region-confined uniform traffic — the scale-sweep workload.
+
+    Fully vectorized (O(txns) numpy, no per-event Python loop), so a
+    100k-point grid's shared trace compiles in microseconds regardless of
+    ``txns``.  ``burst`` and ``read_fraction`` are the only shape knobs; the
+    stream is paced to ``rate`` beats/cycle like every other generator."""
+    burst = int(params.get("burst", 4))
+    read_fraction = float(params.get("read_fraction", 0.5))
+    rng = np.random.default_rng(seed)
+    iw = (rng.random(txns) >= read_fraction).astype(np.int32)
+    b = np.full(txns, burst, np.int32)
+    a = lo + rng.integers(0, max(hi - lo - burst, 1), txns)
+    s = _rate_starts(b, rate)
+    return _finalize(iw, b, a, s, lo, hi, txns)
+
+
 GENERATORS = {
     "camera": camera_frame_dma,
     "radar": radar_chirp_bursts,
     "lidar": lidar_scatter,
     "npu": npu_tiled,
     "cpu": cpu_scatter,
+    "uniform": uniform_scatter,
 }

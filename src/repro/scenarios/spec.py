@@ -46,6 +46,7 @@ from repro.core.traffic import pad_rows
 from repro.scenarios.generators import GENERATORS
 
 if TYPE_CHECKING:
+    from repro.core.traffic import EventSchedule
     from repro.scenarios.sweep import SweepResult
 
 QOS_CLASSES = ("safety", "realtime", "besteffort")
@@ -243,16 +244,31 @@ class CompiledScenario:
         return np.array([i for i, c in enumerate(self.qos) if c == cls],
                         np.int32)
 
+    def schedule(self) -> "EventSchedule":
+        """This scenario as a packed :class:`~repro.core.traffic.EventSchedule`
+        — the same transactions as :attr:`trace` plus the per-master QoS class
+        index and deadline the streaming collector needs.  Feed it to any
+        ``SimParams`` whose ``stages`` is the schedule pipeline."""
+        from repro.core.traffic import compile_schedule
+        deadlines = self.deadlines or [None] * self.trace.num_masters
+        return compile_schedule(
+            self.trace,
+            classes=[QOS_CLASSES.index(c) for c in self.qos],
+            deadlines=deadlines)
+
     def simulate(self, params: SimParams = SimParams()) -> "SweepResult":
         """Run this scenario at one parameter point and summarize it."""
         return self.simulate_batch([params])[0]
 
     def simulate_batch(self, params: Sequence[SimParams], *,
-                       batched: bool = True) -> List["SweepResult"]:
+                       batched: bool = True,
+                       chunk: Optional[int] = None) -> List["SweepResult"]:
         """Run one trace × many parameter points (one vmapped scan when
-        ``batched``); see ``scenarios.sweep.run_sweep`` for scenario grids."""
+        ``batched``; ``chunk=C`` streams the grid through ``lax.map`` in
+        C-point chunks — see ``core.simulator.simulate_batch``); see
+        ``scenarios.sweep.run_sweep`` for scenario grids."""
         from repro.scenarios.sweep import simulate_compiled
-        return simulate_compiled(self, params, batched=batched)
+        return simulate_compiled(self, params, batched=batched, chunk=chunk)
 
     def summarize(self, params: SimParams, metrics) -> "SweepResult":
         """Per-class/isolation/slice summary of one point's raw metrics."""

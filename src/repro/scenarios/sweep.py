@@ -48,11 +48,12 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core.address import master_home_slices, slice_of_beat
+from repro.core.percentile import p2_quantiles
 from repro.core.qos import regions_isolated, touched_subbanks
-from repro.core.simulator import (SimParams, batch_envelope, simulate,
-                                  simulate_batch)
+from repro.core.simulator import (STREAM_CLASSES, SimParams, batch_envelope,
+                                  simulate, simulate_batch)
 from repro.core.traffic import pad_trace
-from repro.scenarios.spec import CompiledScenario, Scenario
+from repro.scenarios.spec import QOS_CLASSES, CompiledScenario, Scenario
 
 PERCENTILES = (50, 95, 99)
 
@@ -200,6 +201,77 @@ def _class_stats(compiled: CompiledScenario,
     return out
 
 
+def _stream_class_stats(compiled: CompiledScenario,
+                        metrics: Dict[str, np.ndarray]
+                        ) -> Dict[str, Dict[str, float]]:
+    """Per-class stats from the streaming accumulators (``collect="stream"``).
+
+    Emits the SAME key schema as :func:`_class_stats` — throughput comes from
+    the identical per-port counters, latency percentiles from the P² marker
+    state (within the documented ``percentile.P2_RANK_TOL_PCT`` rank band of
+    the exact numbers), ``lat_max`` and the class/deadline counts exactly.
+    ``txns_total``/``deadline_txns`` are static properties of the workload and
+    are recomputed host-side from the trace."""
+    trace = compiled.trace
+    iw = np.asarray(trace.is_write)
+    real = np.asarray(trace.burst) > 0
+    X = trace.num_masters
+    deadlines = compiled.deadlines or [None] * X
+    dl = np.array([-1 if d is None else int(d) for d in deadlines])
+    tput = {d: np.asarray(metrics[f"{d}_throughput"])
+            for d in ("read", "write")}
+    tput_busy = {d: np.asarray(metrics[f"{d}_throughput_busy"])
+                 for d in ("read", "write")}
+    cls_done = np.asarray(metrics["cls_done"])          # [NC, (r, w)]
+    dl_done = np.asarray(metrics["dl_done"])            # [NC]
+    dl_miss = np.asarray(metrics["dl_miss"])            # [NC]
+    p2q = p2_quantiles(metrics["p2_height"], metrics["p2_npos"],
+                       metrics["p2_count"])             # [G, NQ]
+    p2_count = np.asarray(metrics["p2_count"])
+    p2_max = np.asarray(metrics["p2_max"])
+
+    def pctl_block(stats, prefix, g):
+        for i, p in enumerate(PERCENTILES):
+            stats[f"{prefix}_lat_p{p}"] = (
+                float(p2q[g, i]) if p2_count[g] > 0 else float("nan"))
+        stats[f"{prefix}_lat_max"] = (
+            float(p2_max[g]) if p2_count[g] > 0 else float("nan"))
+
+    out: Dict[str, Dict[str, float]] = {}
+    for cls in sorted(set(compiled.qos)):
+        rows = compiled.masters_of_class(cls)
+        cid = QOS_CLASSES.index(cls)
+        stats: Dict[str, float] = MetricAliasDict({
+            "masters": int(len(rows)),
+            "txns_done": int(cls_done[cid].sum()),
+            "txns_total": int(real[rows].sum()),
+        })
+        issued = {"read": (real[rows] & (iw[rows] == 0)).any(axis=1),
+                  "write": (real[rows] & (iw[rows] == 1)).any(axis=1)}
+        for d in ("read", "write"):
+            has = issued[d]
+            stats[f"{d}_throughput"] = (
+                float(tput[d][rows][has].mean()) if has.any()
+                else float("nan"))
+            stats[f"{d}_throughput_busy"] = (
+                float(tput_busy[d][rows][has].mean()) if has.any()
+                else float("nan"))
+        # streaming group ids: view * (2 NC) + class * 2 + dir
+        for d, dname in ((0, "read"), (1, "write")):
+            pctl_block(stats, dname, cid * 2 + d)
+            pctl_block(stats, f"{dname}_e2e",
+                       2 * STREAM_CLASSES + cid * 2 + d)
+        considered = int(real[rows[dl[rows] >= 0]].sum())
+        # misses = completed-late + never-completed
+        missed = int(dl_miss[cid]) + considered - int(dl_done[cid])
+        stats["deadline_txns"] = considered
+        stats["deadline_misses"] = missed
+        stats["deadline_miss_rate"] = (
+            float(missed / considered) if considered else float("nan"))
+        out[cls] = stats
+    return out
+
+
 def _share_labels(compiled: CompiledScenario, num_masters: int) -> List[int]:
     """Isolation-group label per trace row: masters naming the same
     ``share_group`` collapse to one label; everyone else (and inert padding
@@ -271,9 +343,16 @@ def _slice_report(compiled: CompiledScenario,
 
 def summarize_compiled(compiled: CompiledScenario, params: SimParams,
                        metrics: Dict[str, np.ndarray]) -> SweepResult:
-    """Implementation behind :meth:`CompiledScenario.summarize`."""
+    """Implementation behind :meth:`CompiledScenario.summarize`.
+
+    Streaming runs (``collect="stream"``) carry no per-transaction timestamp
+    arrays, so their per-class stats come from the fixed-size accumulators;
+    exact runs are summarized from the raw ``accept_cycle``/``complete_cycle``
+    columns as before.  Both emit the same key schema."""
+    stats_fn = (_class_stats if "accept_cycle" in metrics
+                else _stream_class_stats)
     return SweepResult(compiled.scenario.name, params, metrics,
-                       _class_stats(compiled, metrics),
+                       stats_fn(compiled, metrics),
                        _isolation_report(compiled),
                        _slice_report(compiled, metrics))
 
@@ -287,20 +366,29 @@ def summarize_point(compiled: CompiledScenario, params: SimParams,
 
 
 def simulate_compiled(compiled: CompiledScenario, prms: Sequence[SimParams],
-                      *, batched: bool = True) -> List[SweepResult]:
+                      *, batched: bool = True,
+                      chunk: Optional[int] = None) -> List[SweepResult]:
     """One compiled scenario × many parameter points (the implementation
-    behind ``CompiledScenario.simulate``/``simulate_batch``)."""
+    behind ``CompiledScenario.simulate``/``simulate_batch``).
+
+    The trace enters the batched program ONCE (shared across the whole
+    parameter grid); points whose ``stages`` select the schedule pipeline run
+    from the scenario's packed :meth:`CompiledScenario.schedule` (which also
+    carries the QoS classes/deadlines the streaming collector groups by).
+    ``chunk=C`` bounds peak live memory to one C-point chunk."""
     if not prms:
         return []
     env = batch_envelope(list(prms))
-    pinned = [replace(p, slots_override=env.slots_per_master) for p in prms]
+    pinned = [replace(p, slots_override=env.slots_per_master,
+                      inflight_override=env.inflight_slots) for p in prms]
+    inp = compiled.schedule() if env.uses_schedule() else compiled.trace
     t0 = time.perf_counter()
     if batched and len(pinned) > 1:
-        stacked = simulate_batch([compiled.trace] * len(pinned), pinned)
+        stacked = simulate_batch([inp], pinned, chunk=chunk)
         per_point = [{k: np.asarray(v)[i] for k, v in stacked.items()}
                      for i in range(len(pinned))]
     else:
-        per_point = [simulate(compiled.trace, p) for p in pinned]
+        per_point = [simulate(inp, p) for p in pinned]
     rate = _sim_rate(pinned, time.perf_counter() - t0, batched)
     out = [summarize_compiled(compiled, p, met)
            for p, met in zip(pinned, per_point)]
@@ -311,7 +399,8 @@ def simulate_compiled(compiled: CompiledScenario, prms: Sequence[SimParams],
 
 def run_sweep(points: Sequence[SweepPoint], *,
               batched: bool = True,
-              envelope: Optional[Sequence[SweepPoint]] = None
+              envelope: Optional[Sequence[SweepPoint]] = None,
+              chunk: Optional[int] = None
               ) -> List[SweepResult]:
     """Evaluate every point; one compiled vmapped scan when ``batched``.
 
@@ -319,6 +408,7 @@ def run_sweep(points: Sequence[SweepPoint], *,
     parameter extremes define the common padding/ring-size envelope.  Pass the
     full grid here to evaluate a *subset* of it under identical padding —
     e.g. to spot-check a batched sweep against sequential runs bit-for-bit.
+    ``chunk=C`` streams the batch through ``lax.map`` C points at a time.
     """
     if not points:
         return []
@@ -331,17 +421,21 @@ def run_sweep(points: Sequence[SweepPoint], *,
     padded = [pad_trace(c.trace, X, N) for c in compiled]
     env = batch_envelope([p.params for p in env_pts]
                          + [p.params for p in points])
-    # pin every point to the envelope ring size so batched == sequential
-    prms = [replace(p.params, slots_override=env.slots_per_master)
+    # pin every point to the envelope ring/in-flight-table size so
+    # batched == sequential
+    prms = [replace(p.params, slots_override=env.slots_per_master,
+                    inflight_override=env.inflight_slots)
             for p in points]
+    inputs = (padded if not env.uses_schedule()
+              else [_padded_schedule(c, t) for c, t in zip(compiled, padded)])
     t0 = time.perf_counter()
     if batched:
-        stacked = simulate_batch(padded, prms)
+        stacked = simulate_batch(inputs, prms, chunk=chunk)
         per_point = [
             {k: np.asarray(v)[i] for k, v in stacked.items()}
             for i in range(len(points))]
     else:
-        per_point = [simulate(t, p) for t, p in zip(padded, prms)]
+        per_point = [simulate(t, p) for t, p in zip(inputs, prms)]
     rate = _sim_rate(prms, time.perf_counter() - t0, batched)
     out = []
     for comp, prm, met, pad in zip(compiled, prms, per_point, padded):
@@ -354,6 +448,20 @@ def run_sweep(points: Sequence[SweepPoint], *,
         res.sim_rate = rate
         out.append(res)
     return out
+
+
+def _padded_schedule(compiled: CompiledScenario, padded_trace):
+    """Schedule for one sweep point's envelope-padded trace: the compiled
+    masters keep their QoS class/deadline; inert padding rows are
+    unclassified."""
+    from repro.core.simulator import UNCLASSIFIED
+    from repro.core.traffic import compile_schedule
+    X = padded_trace.num_masters
+    cls = [QOS_CLASSES.index(c) for c in compiled.qos]
+    dls = list(compiled.deadlines or [None] * len(compiled.qos))
+    return compile_schedule(padded_trace,
+                            classes=cls + [UNCLASSIFIED] * (X - len(cls)),
+                            deadlines=dls + [None] * (X - len(dls)))
 
 
 def _sim_rate(prms: Sequence[SimParams], wall_s: float,

@@ -141,17 +141,27 @@ def record_serving_run(*, num_requests: int = 32, max_batch: int = 8,
                        max_len: int = 96, block_size: int = 16,
                        prompt_lo: int = 16, prompt_hi: int = 48,
                        max_new_tokens: int = 16, seed: int = 0,
-                       max_steps: int = 4000) -> ServingAccessRecord:
+                       max_steps: Optional[int] = 4000
+                       ) -> ServingAccessRecord:
     """Record a traffic-only :class:`ServingEngine` run.
 
     Builds the engine with ``params=None`` (identical control flow, no model
     math), submits ``num_requests`` random-length prompts, runs to drain, and
     returns the access record.  Deterministic in ``seed``.
+
+    ``max_steps=None`` sizes the step budget from the workload itself
+    (every request decodes at most ``max_new_tokens`` steps and admission
+    wavefronts add at most one prefill step each), so thousand-request
+    recordings for the scale co-sim can't silently truncate; the recording
+    raises if the engine somehow fails to drain within that budget.
     """
     import numpy as np
 
     from repro.serving.engine import ServingEngine
 
+    if max_steps is None:
+        waves = -(-num_requests // max_batch)
+        max_steps = 64 + waves * (max_new_tokens + 2)
     rec = KVAccessRecorder()
     eng = ServingEngine(None, None, max_batch=max_batch, max_len=max_len,
                         block_size=block_size, recorder=rec)
@@ -160,4 +170,9 @@ def record_serving_run(*, num_requests: int = 32, max_batch: int = 8,
         n = int(rng.integers(prompt_lo, prompt_hi))
         eng.submit(np.zeros(n, np.int32), max_new_tokens=max_new_tokens)
     eng.run(max_steps=max_steps)
+    if len(rec.record.frees) < num_requests:
+        raise RuntimeError(
+            f"recording drained only {len(rec.record.frees)} of "
+            f"{num_requests} requests within {max_steps} steps — raise "
+            "max_steps (or pass max_steps=None to auto-size it)")
     return rec.record

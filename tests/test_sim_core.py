@@ -4,6 +4,7 @@ bank-arbiter kernel's grant-for-grant parity with the arbitration stage.
 The hypothesis property test is skipped where hypothesis is absent; the
 randomized parity sweeps below it cover the same contract everywhere.
 """
+import dataclasses
 from dataclasses import replace
 
 import jax
@@ -220,9 +221,11 @@ def test_init_state_narrow_dtypes():
     assert st.credits.dtype == jnp.int16
     assert st.sl_bank.dtype == jnp.int16
     assert st.sl_arrive.dtype == jnp.int32
-    # and it is a pytree the scan can carry
+    # and it is a pytree the scan can carry: every field is a leaf, and the
+    # schedule/streaming extensions are zero-size on the dense path
     leaves = jax.tree_util.tree_leaves(st)
-    assert len(leaves) == 25
+    assert len(leaves) == len(dataclasses.fields(SimState)) == 44
+    assert st.ift_write.shape == (4, 0) and st.pt_count.shape == (0, 2)
 
 
 def test_param_width_validation():

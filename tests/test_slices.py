@@ -261,7 +261,10 @@ def test_batch_sharding_single_device_falls_back():
 
 def test_sharded_batch_matches_unsharded_across_devices():
     """Force 2 host devices in a subprocess (the flag must precede jax
-    import) and check the sharded batch is bit-identical to unsharded."""
+    import) and check the sharded batch is bit-identical to unsharded —
+    including a NON-divisible batch (padded up to the device multiple and
+    sliced back, not silently single-devices) and a chunked run whose
+    per-chunk axis is sharded."""
     prog = """
 import numpy as np, jax
 assert len(jax.devices()) == 2, jax.devices()
@@ -278,6 +281,16 @@ s = simulate_batch(traces, prms, shard=True)
 u = simulate_batch(traces, prms, shard=False)
 for k in s:
     assert np.array_equal(s[k], u[k]), k
+# non-divisible batch: padded to the device multiple, sliced back to B=3
+s3 = simulate_batch(traces[:3], prms[:3], shard=True)
+u3 = simulate_batch(traces[:3], prms[:3], shard=False)
+for k in s3:
+    assert np.asarray(s3[k]).shape[0] == 3, k
+    assert np.array_equal(s3[k], u3[k]), k
+# chunked + sharded (chunk divisible by device count)
+c = simulate_batch(traces, prms, shard=True, chunk=2)
+for k in c:
+    assert np.array_equal(c[k], u[k]), k
 print("OK")
 """
     env = {"XLA_FLAGS": "--xla_force_host_platform_device_count=2",
