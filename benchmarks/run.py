@@ -11,7 +11,10 @@ warm) from ``run_s`` (steady state), and a jitted job whose wall time is all
 compile no longer reads as a slow simulator.  Both calls are fenced with
 ``jax.block_until_ready`` so async dispatch cannot leak work past the timer.
 ``--cold`` skips the warm pass (halves wall time; ``run_s`` then includes
-compile and ``compile_s`` is null)."""
+compile and ``compile_s`` is null).  ``--profile`` wraps each job's warm
+pass in ``jax.profiler.trace`` and writes the trace directory next to the
+JSON artifact (``experiments/profile/<job>/``) so the remaining hot stages
+can be inspected in TensorBoard/Perfetto instead of guessed."""
 from __future__ import annotations
 
 import argparse
@@ -20,14 +23,23 @@ import time
 from pathlib import Path
 
 
-def _timed(fn):
-    """(result, compile_s, run_s) — cold call then warm call, both fenced."""
+def _timed(fn, trace_dir: Path | None = None):
+    """(result, compile_s, run_s) — cold call then warm call, both fenced.
+
+    With ``trace_dir`` the warm call runs inside ``jax.profiler.trace`` so
+    the trace captures steady-state device/host activity, not compilation.
+    """
+    import contextlib
+
     import jax
 
     t0 = time.time()
     out = jax.block_until_ready(fn())
     t1 = time.time()
-    jax.block_until_ready(fn())
+    prof = (jax.profiler.trace(str(trace_dir)) if trace_dir is not None
+            else contextlib.nullcontext())
+    with prof:
+        jax.block_until_ready(fn())
     t2 = time.time()
     run_s = t2 - t1
     return out, max((t1 - t0) - run_s, 0.0), run_s
@@ -43,7 +55,13 @@ def main() -> None:
                     help="print the available job names and exit")
     ap.add_argument("--cold", action="store_true",
                     help="single cold run per job (no compile/run split)")
+    ap.add_argument("--profile", action="store_true",
+                    help="wrap each job's warm pass in jax.profiler.trace; "
+                         "traces land in experiments/profile/<job>/ "
+                         "(implies the warm pass, i.e. not --cold)")
     args = ap.parse_args()
+    if args.profile and args.cold:
+        raise SystemExit("--profile needs the warm pass; drop --cold")
 
     from benchmarks import paper_figures as F
     from benchmarks.qos_isolation import qos_isolation_sweep
@@ -104,14 +122,22 @@ def main() -> None:
             t0 = time.time()
             out = fn()
             compile_s, run_s = None, time.time() - t0
+            trace_dir = None
         else:
-            out, compile_s, run_s = _timed(fn)
+            trace_dir = (Path("experiments/profile") / name
+                         if args.profile else None)
+            if trace_dir is not None:
+                trace_dir.mkdir(parents=True, exist_ok=True)
+            out, compile_s, run_s = _timed(fn, trace_dir)
         results[name] = {
             "seconds": round((compile_s or 0.0) + run_s, 2),  # total, legacy
             "compile_s": None if compile_s is None else round(compile_s, 2),
             "run_s": round(run_s, 2),
             "results": out,
         }
+        if trace_dir is not None:
+            results[name]["profile_dir"] = str(trace_dir)
+            print(f"# profile trace: {trace_dir}")
         key = next(iter(out))
         cs = "" if compile_s is None else f"{compile_s:.2f}"
         print(f"{name},{cs},{run_s:.2f},{json.dumps(out[key])[:110]}")

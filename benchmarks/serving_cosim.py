@@ -45,6 +45,7 @@ runs it and uploads ``experiments/serving_cosim_summary.json``.
 from __future__ import annotations
 
 import json
+import time
 from dataclasses import replace
 from typing import Dict, Optional, Sequence
 
@@ -52,7 +53,8 @@ import numpy as np
 
 from repro.core.address import MemoryGeometry
 from repro.core.simulator import (SCHEDULE_PIPELINE, SimParams, Trace,
-                                  carry_nbytes, simulate_batch)
+                                  carry_nbytes, compile_simulate,
+                                  simulate_batch)
 from repro.scenarios import record_serving_run, serving_scenario
 
 CONFIGS = ("alone", "qos_on", "qos_off")
@@ -199,8 +201,9 @@ def serving_cosim(*, batch_sizes: Sequence[int] = (2, 4),
 
 def serving_scale(*, num_requests: int = 1024, max_batch: int = 16,
                   prompt_lo: int = 16, prompt_hi: int = 33,
-                  max_new_tokens: int = 8, cycles_per_step: int = 64,
-                  bank_occupancy: int = 8, seed: int = 0) -> Dict:
+                  max_new_tokens: int = 8, cycles_per_step: int = 256,
+                  bank_occupancy: int = 8, seed: int = 0,
+                  speedup_floor: float = 0.0) -> Dict:
     """Thousand-request co-sim on the streaming collector (scale smoke).
 
     Records a real ``num_requests``-request engine run (continuous batching
@@ -210,6 +213,18 @@ def serving_scale(*, num_requests: int = 1024, max_batch: int = 16,
     the request count scales the *input schedule* only — the carry footprint
     is independent of it (reported below).  Asserts the run drains and that
     decode-class deadline accounting is intact.
+
+    The summary also times the run with the early-exit driver + time skip
+    ON vs the fixed horizon OFF — same process, both AOT warm-compiled, one
+    execution each — and, when ``speedup_floor`` > 0, asserts the ON/OFF
+    wall-clock ratio meets it (the CI scale-smoke gate).
+
+    ``cycles_per_step`` defaults to 256 fabric cycles per decode step: each
+    step's KV gather drains and the fabric idles until the next step, as a
+    real engine (whose step time is dominated by compute, not the fabric)
+    would leave it.  Earlier PRs compressed the cadence to 64 to keep the
+    fixed-horizon scan affordable; the time skip jumps the idle stretches,
+    so the realistic cadence now costs barely more than the compressed one.
     """
     rec = record_serving_run(
         num_requests=num_requests, max_batch=max_batch,
@@ -245,6 +260,35 @@ def serving_scale(*, num_requests: int = 1024, max_batch: int = 16,
         "sim_rate": res.sim_rate,
     }
     assert out["requests"] >= num_requests
+
+    # --- early-exit wall-clock win, measured warm in the same process ---
+    # (AOT-compile both drivers, then time exactly one execution of each:
+    # the fixed-horizon leg is expensive enough at this scale that a
+    # cache-warming double run would dominate the job)
+    off = replace(prm, early_exit=False, time_skip=False)
+    run_on = compile_simulate(sched, prm)
+    run_off = compile_simulate(sched, off)
+    t0 = time.perf_counter()
+    run_on()
+    wall_on = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    run_off()
+    wall_off = time.perf_counter() - t0
+    speedup = wall_off / max(wall_on, 1e-9)
+    out["early_exit"] = {
+        "wall_s_on": round(wall_on, 3),
+        "wall_s_off": round(wall_off, 3),
+        "speedup": round(speedup, 2),
+        "nominal_cycles": prm.max_cycles,
+        "effective_cycles": int(np.asarray(res.metrics["effective_cycles"])),
+        "skipped_cycles": int(np.asarray(res.metrics["skipped_cycles"])),
+        "drained_cycle": int(np.asarray(res.metrics["drained_cycle"])),
+    }
+    if speedup_floor:
+        assert speedup >= speedup_floor, (
+            f"early-exit speedup {speedup:.2f}x below the "
+            f"{speedup_floor:.1f}x floor (on {wall_on:.2f}s vs "
+            f"off {wall_off:.2f}s)")
     return out
 
 
@@ -258,9 +302,14 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
                     help="requests for --scale (default 1024)")
     ap.add_argument("--out", default=None,
                     help="also write the summary JSON here")
+    ap.add_argument("--speedup-floor", type=float, default=1.5,
+                    help="--scale only: fail unless early exit + time skip "
+                         "beat the fixed horizon by this wall-clock factor "
+                         "(0 disables; default 1.5)")
     args = ap.parse_args(argv)
-    summary = (serving_scale(num_requests=args.requests) if args.scale
-               else serving_cosim())
+    summary = (serving_scale(num_requests=args.requests,
+                             speedup_floor=args.speedup_floor)
+               if args.scale else serving_cosim())
     text = json.dumps(summary, indent=1, default=str)
     if args.out:
         from pathlib import Path

@@ -30,8 +30,11 @@ import argparse
 import json
 import subprocess
 import time
+from dataclasses import replace
 from pathlib import Path
 from typing import Dict, Optional, Sequence
+
+import numpy as np
 
 REPO_ROOT = Path(__file__).resolve().parents[1]
 BENCH_PATH = REPO_ROOT / "BENCH_sim_speed.json"
@@ -61,10 +64,11 @@ def measure_point(batch: int, *, masters: int = 8, txns: int = 24,
     the batch's live memory footprint.
 
     Returns ``{compile_s, run_s, cycles_per_sec, batch, max_cycles,
-    input_bytes, carry_bytes}``.  The workload is deliberately
-    *undrained-agnostic*: the scan always runs ``max_cycles`` iterations
-    regardless of traffic, so the rate is a pure property of the cycle body,
-    not of the trace.  ``input_bytes``/``carry_bytes`` are the peak live
+    effective_cycles, drained_fraction, input_bytes, carry_bytes}``.
+    ``cycles_per_sec`` keeps the NOMINAL ``batch * max_cycles`` numerator so
+    baselines stay comparable; ``effective_cycles`` (summed over the batch)
+    and ``drained_fraction`` report how much of that horizon the early-exit
+    driver actually simulated.  ``input_bytes``/``carry_bytes`` are the peak live
     prepared-input and scan-carry bytes of the whole batch (shape-only
     accounting via ``core.simulator.input_nbytes``/``carry_nbytes`` — the
     quantities a 100k-point grid multiplies).
@@ -84,7 +88,8 @@ def measure_point(batch: int, *, masters: int = 8, txns: int = 24,
     t1 = time.perf_counter()
     # steady state: warm jit cache, fresh host->device buffers each call
     # (the jitted core donates its inputs, so buffers cannot be reused)
-    jax.block_until_ready(simulate_batch(traces, prms, shard=False))
+    out = simulate_batch(traces, prms, shard=False)
+    jax.block_until_ready(out)
     t2 = time.perf_counter()
     run_s = t2 - t1
     return {
@@ -93,9 +98,61 @@ def measure_point(batch: int, *, masters: int = 8, txns: int = 24,
         "compile_s": round(max(t1 - t0 - run_s, 0.0), 3),
         "run_s": round(run_s, 4),
         "cycles_per_sec": round(batch * max_cycles / run_s, 1),
+        "effective_cycles": int(np.sum(out["effective_cycles"])),
+        "drained_fraction": round(
+            float(np.mean(np.asarray(out["drained_cycle"]) >= 0)), 4),
         "input_bytes": sum(input_nbytes(t, p) for t, p in zip(traces, prms)),
         "carry_bytes": sum(carry_nbytes(p, masters, txns) for p in prms),
     }
+
+
+#: drain-heavy row defaults: frame-cadence workload over a long horizon —
+#: most cycles are idle, so this is where early exit + time skip pay off
+#: (batch kept small: the fixed-horizon OFF leg scans every cycle)
+DRAIN_BATCH = 16
+DRAIN_CYCLES = 4000
+
+
+def measure_drain_heavy(batch: int = DRAIN_BATCH, *, masters: int = 8,
+                        txns: int = 24, burst: int = 8,
+                        max_cycles: int = DRAIN_CYCLES,
+                        seed: int = 0) -> Dict[str, float]:
+    """Early-exit win on a drain-heavy workload, pinned as a bench row.
+
+    A frame-cadence batch (``core.traffic.random_bursty``) is run twice —
+    early exit + time skip ON vs the fixed horizon OFF — and the row
+    records both points/sec rates and their ratio (``speedup``).  The two
+    modes are separate compiles (the driver is a static property), timed
+    warm, same process.
+    """
+    import jax
+
+    from repro.core.simulator import SCHEDULE_PIPELINE, SimParams, simulate_batch
+    from repro.core.traffic import random_bursty
+
+    traces = [random_bursty(masters, txns, burst=burst, gap=150,
+                            seed=seed + i) for i in range(batch)]
+    base = SimParams(max_cycles=max_cycles, stages=SCHEDULE_PIPELINE,
+                     collect="stream")
+    modes = {"on": [base] * batch,
+             "off": [replace(base, early_exit=False)] * batch}
+    row: Dict[str, float] = {"batch": batch, "max_cycles": max_cycles}
+    for name, prms in modes.items():
+        jax.block_until_ready(simulate_batch(traces, prms, shard=False))
+        t0 = time.perf_counter()
+        out = simulate_batch(traces, prms, shard=False)
+        jax.block_until_ready(out)
+        run_s = time.perf_counter() - t0
+        row[f"run_s_{name}"] = round(run_s, 4)
+        row[f"points_per_sec_{name}"] = round(batch / run_s, 2)
+        if name == "on":
+            row["effective_cycles"] = int(np.sum(out["effective_cycles"]))
+            row["skipped_cycles"] = int(np.sum(out["skipped_cycles"]))
+            row["drained_fraction"] = round(
+                float(np.mean(np.asarray(out["drained_cycle"]) >= 0)), 4)
+    row["speedup"] = round(row["points_per_sec_on"]
+                           / row["points_per_sec_off"], 2)
+    return row
 
 
 def _git_commit() -> str:
@@ -116,13 +173,20 @@ def sim_speed_bench(batch_widths: Sequence[int] = BATCH_WIDTHS,
         print(f"# sim_speed batch={b}: "
               f"{detail[str(b)]['cycles_per_sec']:.0f} cycles/s "
               f"(compile {detail[str(b)]['compile_s']:.1f}s, "
-              f"run {detail[str(b)]['run_s']:.2f}s)")
+              f"run {detail[str(b)]['run_s']:.2f}s, "
+              f"drained {detail[str(b)]['drained_fraction']:.0%})")
+    drain = measure_drain_heavy()
+    print(f"# sim_speed drain-heavy batch={drain['batch']}: "
+          f"{drain['points_per_sec_on']:.1f} pts/s with early exit vs "
+          f"{drain['points_per_sec_off']:.1f} without "
+          f"({drain['speedup']:.1f}x, drained {drain['drained_fraction']:.0%})")
     return {
         "date": time.strftime("%Y-%m-%d"),
         "commit": _git_commit(),
         "cycles_per_sec": {b: detail[b]["cycles_per_sec"] for b in detail},
         "footprint_bytes": {b: detail[b]["input_bytes"]
                             + detail[b]["carry_bytes"] for b in detail},
+        "drain_heavy": drain,
         "detail": detail,
     }
 
@@ -157,6 +221,19 @@ def check_regression(new: Dict[str, object],
                     f"(baseline {float(old):.0f} from "
                     f"{base.get('commit', '?')} {base.get('date', '?')}, "
                     f"tolerance {tolerance:.0%})")
+    drain = new.get("drain_heavy", {})
+    base_drain = base.get("drain_heavy", {})
+    if drain and base_drain:
+        rate, old = drain["points_per_sec_on"], base_drain["points_per_sec_on"]
+        if rate < (1.0 - tolerance) * float(old):
+            return (f"drain-heavy points/sec regression: {rate:.1f} < "
+                    f"{(1 - tolerance) * float(old):.1f} "
+                    f"(baseline {float(old):.1f} from "
+                    f"{base.get('commit', '?')} {base.get('date', '?')})")
+    if drain and float(drain.get("speedup", 99.0)) < 1.5:
+        return (f"early-exit speedup collapsed on the drain-heavy row: "
+                f"{drain['speedup']:.2f}x < 1.5x (the driver should skip "
+                f"most of a frame-cadence horizon)")
     return None
 
 

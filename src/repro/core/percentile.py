@@ -124,6 +124,13 @@ def p2_update(height, npos, count, values, gid, mask, *,
     from :func:`p2_init`), ``values``: [M] float32 observations, ``gid``:
     [M] int32 group per observation, ``mask``: [M] bool.  Returns the updated
     (height, npos, count).  Pure jnp — traceable inside the scan.
+
+    An all-False ``mask`` is a bit-exact no-op (``k == 0`` deactivates the
+    marker adjustment and the min/max/count updates reduce over empty
+    selections).  The simulator's idle-cycle time skip relies on this: a
+    skipped idle cycle would have called this with nothing retired, so
+    jumping it cannot perturb the accumulators (pinned by
+    ``tests/test_early_exit.py``).
     """
     jnp = _jnp()
     G, NQ, _ = height.shape

@@ -33,6 +33,8 @@ remaining          int8        undelivered beats per transaction [X, N]
 accept_cycle       int32       acceptance timestamp per transaction [X, N]
 complete_cycle     int32       completion timestamp per transaction [X, N]
 beats_done         int32       read beats returned per port [X]
+drained_at         int32       cycle the run went quiescent, -1 if never ()
+skipped            int32       idle cycles jumped by the time skip ()
 =================  ==========  =============================================
 
 Schedule-pipeline extension (``init_state(F=..., ...)``; every array below is
@@ -180,6 +182,9 @@ class SimState:
     cls_done: jnp.ndarray
     dl_done: jnp.ndarray
     dl_miss: jnp.ndarray
+    # drain bookkeeping (early-exit driver + time skip; always maintained)
+    drained_at: jnp.ndarray
+    skipped: jnp.ndarray
 
     def replace(self, **updates) -> "SimState":
         """Functional field update (the stage functions' write path)."""
@@ -260,4 +265,6 @@ def init_state(*, X: int, N: int, P: int, NB: int, NSL: int,
         cls_done=jnp.zeros((NC, 2), jnp.int32),
         dl_done=jnp.zeros((NC,), jnp.int32),
         dl_miss=jnp.zeros((NC,), jnp.int32),
+        drained_at=jnp.int32(-1),
+        skipped=jnp.int32(0),
     )

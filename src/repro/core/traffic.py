@@ -184,6 +184,26 @@ def random_uniform(num_masters: int, num_txns: int, *, burst: int = 16,
                  np.concatenate([a_r, a_w]))
 
 
+def random_bursty(num_masters: int, num_txns: int, *, burst: int = 8,
+                  gap: int = 200, jitter: int = 8,
+                  read_fraction: float = 0.5, seed: int = 0,
+                  geom: MemoryGeometry = MemoryGeometry()) -> Trace:
+    """Frame-cadence traffic: random addresses like :func:`random_uniform`,
+    but transaction *k* is offered at cycle ``k * gap`` (± ``jitter``) —
+    cameras/radars on a fixed cadence rather than 100 % injection.  Most of
+    the horizon is quiescent, which is exactly what the early-exit driver
+    and idle-cycle time skip accelerate (drain-heavy benchmark rows)."""
+    rng = np.random.default_rng(seed)
+    hi = geom.beats_total - burst
+    iw = (rng.random((num_masters, num_txns)) >= read_fraction).astype(np.int32)
+    b = rng.integers(1, burst + 1, (num_masters, num_txns)).astype(np.int32)
+    a = rng.integers(0, hi, (num_masters, num_txns)).astype(np.int32)
+    start = (np.arange(num_txns)[None, :] * gap
+             + rng.integers(0, max(jitter, 1), (num_masters, num_txns))
+             ).astype(np.int32)
+    return Trace(iw, b, a, start=start)
+
+
 def bulk_linear(num_masters: int, payload_bytes: int, *, burst: int = 16,
                 is_write: bool = False, outstanding_region: bool = True,
                 geom: MemoryGeometry = MemoryGeometry()) -> Trace:

@@ -104,8 +104,9 @@ class SweepResult:
     isolation: Dict[str, object]
     slices: Dict[str, object] = field(default_factory=dict)
     #: sweep-level simulation rate (shared by every point of one call):
-    #: wall_s, sim_cycles_per_sec (simulated fabric cycles / wall second,
-    #: summed over the batch — cf. benchmarks/sim_speed.py), batched
+    #: wall_s, sim_cycles_per_sec (NOMINAL max_cycles / wall second, summed
+    #: over the batch — cf. benchmarks/sim_speed.py), nominal vs effective
+    #: cycles + drained_fraction (early-exit accounting), batched
     sim_rate: Dict[str, object] = field(default_factory=dict)
 
     def summary(self) -> Dict[str, object]:
@@ -389,7 +390,8 @@ def simulate_compiled(compiled: CompiledScenario, prms: Sequence[SimParams],
                      for i in range(len(pinned))]
     else:
         per_point = [simulate(inp, p) for p in pinned]
-    rate = _sim_rate(pinned, time.perf_counter() - t0, batched)
+    rate = _sim_rate(pinned, time.perf_counter() - t0, batched,
+                     per_point)
     out = [summarize_compiled(compiled, p, met)
            for p, met in zip(pinned, per_point)]
     for r in out:
@@ -436,7 +438,8 @@ def run_sweep(points: Sequence[SweepPoint], *,
             for i in range(len(points))]
     else:
         per_point = [simulate(t, p) for t, p in zip(inputs, prms)]
-    rate = _sim_rate(prms, time.perf_counter() - t0, batched)
+    rate = _sim_rate(prms, time.perf_counter() - t0, batched,
+                     per_point)
     out = []
     for comp, prm, met, pad in zip(compiled, prms, per_point, padded):
         # class stats index by the ORIGINAL master rows; padding rows are
@@ -464,11 +467,26 @@ def _padded_schedule(compiled: CompiledScenario, padded_trace):
                             deadlines=dls + [None] * (X - len(dls)))
 
 
-def _sim_rate(prms: Sequence[SimParams], wall_s: float,
-              batched: bool) -> Dict[str, object]:
+def _sim_rate(prms: Sequence[SimParams], wall_s: float, batched: bool,
+              per_point: Optional[Sequence[Dict[str, np.ndarray]]] = None
+              ) -> Dict[str, object]:
     """Sweep-level simulated-cycles/sec (includes JIT on a cold cache —
-    compare against ``benchmarks/sim_speed.py`` for the steady-state rate)."""
+    compare against ``benchmarks/sim_speed.py`` for the steady-state rate).
+
+    ``sim_cycles_per_sec`` stays the *nominal* rate (``max_cycles`` summed
+    over the grid) so the denominator is comparable across runs; with the
+    early-exit driver the scan stops at the drain point, so the summary
+    also reports the *effective* cycles actually simulated and the fraction
+    of points that drained before their horizon."""
     cycles = sum(p.max_cycles for p in prms)
-    return {"wall_s": round(wall_s, 3),
-            "sim_cycles_per_sec": round(cycles / max(wall_s, 1e-9), 1),
-            "batched": batched}
+    out = {"wall_s": round(wall_s, 3),
+           "sim_cycles_per_sec": round(cycles / max(wall_s, 1e-9), 1),
+           "batched": batched}
+    if per_point is not None:
+        eff = sum(int(m["effective_cycles"]) for m in per_point)
+        drained = sum(int(m["drained_cycle"]) >= 0 for m in per_point)
+        out["nominal_cycles"] = int(cycles)
+        out["effective_cycles"] = eff
+        out["effective_cycles_per_sec"] = round(eff / max(wall_s, 1e-9), 1)
+        out["drained_fraction"] = round(drained / max(len(prms), 1), 4)
+    return out

@@ -224,7 +224,7 @@ def test_init_state_narrow_dtypes():
     # and it is a pytree the scan can carry: every field is a leaf, and the
     # schedule/streaming extensions are zero-size on the dense path
     leaves = jax.tree_util.tree_leaves(st)
-    assert len(leaves) == len(dataclasses.fields(SimState)) == 44
+    assert len(leaves) == len(dataclasses.fields(SimState)) == 46
     assert st.ift_write.shape == (4, 0) and st.pt_count.shape == (0, 2)
 
 
