@@ -64,6 +64,7 @@ def main() -> None:
         raise SystemExit("--profile needs the warm pass; drop --cold")
 
     from benchmarks import paper_figures as F
+    from benchmarks.fuzz import fuzz_job
     from benchmarks.qos_isolation import qos_isolation_sweep
     from benchmarks.scale_sweep import scale_sweep
     from benchmarks.scenario_sweep import scenario_sweep
@@ -101,6 +102,9 @@ def main() -> None:
         # same module standalone at >= 10k points under an RSS cap)
         ("scale_sweep", lambda: scale_sweep(
             points=2048 if args.full else 512, chunk=256)),
+        # randomized-spec property fuzz (the CI fuzz-smoke job runs the same
+        # module standalone with a bigger budget + reproducer shrinking)
+        ("fuzz", lambda: fuzz_job(budget=96 if args.full else 48)),
     ]
     valid = [j[0] for j in jobs]
     if args.list:
@@ -116,19 +120,30 @@ def main() -> None:
         jobs = [j for j in jobs if j[0] in wanted]
 
     results = {}
+    failed = []
     print("name,compile_s,run_s,derived")
     for name, fn in jobs:
-        if args.cold:
-            t0 = time.time()
-            out = fn()
-            compile_s, run_s = None, time.time() - t0
-            trace_dir = None
-        else:
-            trace_dir = (Path("experiments/profile") / name
-                         if args.profile else None)
-            if trace_dir is not None:
-                trace_dir.mkdir(parents=True, exist_ok=True)
-            out, compile_s, run_s = _timed(fn, trace_dir)
+        try:
+            if args.cold:
+                t0 = time.time()
+                out = fn()
+                compile_s, run_s = None, time.time() - t0
+                trace_dir = None
+            else:
+                trace_dir = (Path("experiments/profile") / name
+                             if args.profile else None)
+                if trace_dir is not None:
+                    trace_dir.mkdir(parents=True, exist_ok=True)
+                out, compile_s, run_s = _timed(fn, trace_dir)
+        except Exception as e:
+            # keep running the remaining jobs, but make sure a crashed job
+            # cannot read as a silently-passing CI smoke step
+            import traceback
+            traceback.print_exc()
+            failed.append(name)
+            results[name] = {"error": f"{type(e).__name__}: {e}"}
+            print(f"{name},,,FAILED ({type(e).__name__})")
+            continue
         results[name] = {
             "seconds": round((compile_s or 0.0) + run_s, 2),  # total, legacy
             "compile_s": None if compile_s is None else round(compile_s, 2),
@@ -158,32 +173,35 @@ def main() -> None:
     print(f"# wrote {out_path}")
 
     # per-class QoS summary as its own artifact file (CI uploads it)
-    if "qos_isolation_sweep" in results:
+    if "qos_isolation_sweep" in results and "results" in results["qos_isolation_sweep"]:
         q_path = Path("experiments/qos_isolation_summary.json")
         q_path.write_text(json.dumps(
             results["qos_isolation_sweep"]["results"], indent=1, default=str))
         print(f"# wrote {q_path}")
 
     # multi-slice scaling summary, likewise uploaded by CI
-    if "slice_scaling" in results:
+    if "slice_scaling" in results and "results" in results["slice_scaling"]:
         s_path = Path("experiments/slice_scaling_summary.json")
         s_path.write_text(json.dumps(
             results["slice_scaling"]["results"], indent=1, default=str))
         print(f"# wrote {s_path}")
 
     # serving co-sim decode-isolation summary, likewise uploaded by CI
-    if "serving_cosim" in results:
+    if "serving_cosim" in results and "results" in results["serving_cosim"]:
         v_path = Path("experiments/serving_cosim_summary.json")
         v_path.write_text(json.dumps(
             results["serving_cosim"]["results"], indent=1, default=str))
         print(f"# wrote {v_path}")
 
     # chunked-scaling summary, likewise uploaded by CI
-    if "scale_sweep" in results:
+    if "scale_sweep" in results and "results" in results["scale_sweep"]:
         g_path = Path("experiments/scale_sweep_summary.json")
         g_path.write_text(json.dumps(
             results["scale_sweep"]["results"], indent=1, default=str))
         print(f"# wrote {g_path}")
+
+    if failed:
+        raise SystemExit(f"failed jobs: {failed}")
 
 
 if __name__ == "__main__":

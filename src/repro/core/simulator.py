@@ -1647,6 +1647,11 @@ def _metrics(st: SimState, burst, is_w, prm: SimParams) -> Dict[str, jnp.ndarray
                                    jnp.sum(write_lat, 1) / n_w, 0.0),
         "write_lat_max": jnp.max(jnp.where(w, lat, 0.0), axis=1),
         "all_done": jnp.all(jnp.where(real, done, True)),
+        # completed transactions per port, split by direction [X, 2] — same
+        # schema as the streaming collector's pt_count, so per-master
+        # conservation checks work on either collection path
+        "txns_done_port": jnp.stack([jnp.sum(r, axis=1), jnp.sum(w, axis=1)],
+                                    axis=1).astype(jnp.int32),
         "beats_done": st.beats_done,
         "cycles": st.now,
         # cycle the run went quiescent (-1: never — it hit max_cycles);

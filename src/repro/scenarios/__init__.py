@@ -20,6 +20,14 @@ from repro.scenarios.serving import ServingSource, serving_scenario
 from repro.scenarios.sweep import (DEPRECATED_METRIC_KEYS, MetricAliasDict,
                                    SweepPoint, SweepResult, run_sweep,
                                    summarize_compiled, summarize_point)
+from repro.scenarios.fuzz import (FuzzCase, FuzzConfig, FuzzOutcome,
+                                  case_from_json, case_to_json,
+                                  evaluate_cases, load_reproducer,
+                                  replay_case, run_fuzz, sample_case,
+                                  shrink_case)
+from repro.scenarios.properties import (ORACLES, OracleBounds,
+                                        PropertyContext, Violation,
+                                        check_properties)
 from repro.serving.record import record_serving_run
 
 __all__ = [
@@ -30,4 +38,8 @@ __all__ = [
     "ServingSource", "serving_scenario", "record_serving_run",
     "highway_pilot", "parking_surround", "preset_scenarios", "qos_isolation",
     "sensor_stress", "slice_scaling", "urban_perception",
+    "FuzzCase", "FuzzConfig", "FuzzOutcome", "case_from_json", "case_to_json",
+    "evaluate_cases", "load_reproducer", "replay_case", "run_fuzz",
+    "sample_case", "shrink_case", "ORACLES", "OracleBounds",
+    "PropertyContext", "Violation", "check_properties",
 ]

@@ -1,0 +1,35 @@
+"""Replay every committed fuzz reproducer against its expected verdict.
+
+``tests/data/fuzz_corpus/`` holds minimized specs the fuzzer has found (plus
+known-clean sentinels).  Each JSON carries the spec and the oracle set it is
+expected to violate; replaying them in tier-1 turns past fuzzer finds into
+permanent regression tests.  To grow the corpus, copy a
+``reproducer_*.json`` artifact from a failed ``fuzz-smoke`` CI run (or from
+``benchmarks.fuzz --out-dir``) into the directory — the file format is
+exactly what :func:`repro.scenarios.fuzz.load_reproducer` reads.
+"""
+from pathlib import Path
+
+import pytest
+
+from repro.scenarios.fuzz import load_reproducer, replay_case
+
+CORPUS = Path(__file__).parent / "data" / "fuzz_corpus"
+SPECS = sorted(CORPUS.glob("*.json"))
+
+
+def test_corpus_is_seeded():
+    assert SPECS, f"empty fuzz corpus at {CORPUS}"
+    # at least one violating reproducer and one clean sentinel
+    verdicts = [load_reproducer(p)[1].get("violated_oracles", [])
+                for p in SPECS]
+    assert any(verdicts) and not all(verdicts)
+
+
+@pytest.mark.parametrize("path", SPECS, ids=lambda p: p.stem)
+def test_corpus_spec_replays_to_expected_verdict(path):
+    case, verdict = load_reproducer(path)
+    expected = sorted(verdict.get("violated_oracles", []))
+    result = replay_case(case)
+    assert sorted({v.oracle for v in result.violations}) == expected, \
+        [v.message for v in result.violations]
